@@ -1,0 +1,36 @@
+"""Shared helpers for the per-figure benchmark drivers."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List
+
+import numpy as np
+
+RESULTS_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "experiments", "bench")
+
+FAST = bool(os.environ.get("REPRO_BENCH_FAST"))
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    """CSV line per the harness contract: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def save_json(name: str, payload) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, default=float)
+    return path
+
+
+def timed(fn, *args, reps: int = 1, **kw):
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / reps
+    return out, dt * 1e6

@@ -1,0 +1,28 @@
+"""Fig. 1/7: request-length distributions (CDF summary per distribution)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, save_json, timed
+from repro.workloads import DISTRIBUTIONS, length_cdf
+
+
+def run() -> None:
+    out = {}
+    for dist in DISTRIBUTIONS:
+        (x, cdf), us = timed(length_cdf, dist, 10000)
+        stats = {
+            "p50": float(np.interp(0.5, cdf, x)),
+            "p90": float(np.interp(0.9, cdf, x)),
+            "p99": float(np.interp(0.99, cdf, x)),
+            "mean": float(x.mean()),
+        }
+        out[dist] = stats
+        emit(f"fig1_length_cdf/{dist}", us,
+             f"p50={stats['p50']:.0f};p99={stats['p99']:.0f};"
+             f"mean={stats['mean']:.0f}")
+    save_json("fig1_length_cdf", out)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,33 @@
+"""Fig. 3: expert activation hotspots (max/mean per layer over a window)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, save_json, timed
+from repro.serving.routing_sim import SourceExpertTraffic
+
+
+def run() -> None:
+    tr = SourceExpertTraffic(48, 128, 2, seed=0)
+
+    def window():
+        counts = np.zeros((48, 128), np.int64)
+        for s in range(2):
+            for _ in range(50):
+                counts += tr.sample_counts(s, 1000, 8)
+        return counts
+
+    counts, us = timed(window)
+    ratio = counts.max(axis=1) / np.maximum(counts.mean(axis=1), 1)
+    out = {"hottest_over_mean_p50": float(np.percentile(ratio, 50)),
+           "hottest_over_mean_max": float(ratio.max()),
+           "layers_over_5x": int((ratio > 5).sum())}
+    emit("fig3_expert_heatmap", us,
+         f"hot/mean_p50={out['hottest_over_mean_p50']:.1f}x;"
+         f"max={out['hottest_over_mean_max']:.1f}x;"
+         f"layers>5x={out['layers_over_5x']}/48")
+    save_json("fig3_expert_heatmap", out)
+
+
+if __name__ == "__main__":
+    run()

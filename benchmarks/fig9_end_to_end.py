@@ -1,0 +1,72 @@
+"""Figs. 9/10: end-to-end latency + throughput across systems x RPS x dists.
+
+Paper headline (vs vLLM, averaged over all rates/distributions/seeds):
+TTFT -42.9%, TPOT -33.3%, P99 TTFT -44.3%, high-load throughput +3.0%.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import FAST, emit, save_json, timed
+from repro.serving import PAPER_SYSTEMS, simulate
+from repro.workloads import DISTRIBUTIONS, generate_trace
+
+SYSTEMS = ("vllm", "moetuner", "semmoe", "gimbal")
+
+
+def run() -> None:
+    rates = (4.0,) if FAST else (2.0, 3.0, 4.0)
+    dists = ("random",) if FAST else DISTRIBUTIONS
+    seeds = (1,) if FAST else (1, 2)
+    n_req = 120 if FAST else 250
+
+    rows = []
+    for dist in dists:
+        for rps in rates:
+            for name in SYSTEMS:
+                vals = []
+                for seed in seeds:
+                    trace = generate_trace(dist, n_req, rps=rps, seed=seed,
+                                           mean_output=250)
+                    res, us = timed(simulate, trace, PAPER_SYSTEMS[name],
+                                    traffic_seed=seed)
+                    vals.append((res.mean_ttft, res.mean_tpot,
+                                 res.p99_ttft, res.mean_e2e,
+                                 res.throughput))
+                m = np.mean(vals, axis=0)
+                rows.append({"dist": dist, "rps": rps, "system": name,
+                             "ttft": m[0], "tpot": m[1], "p99_ttft": m[2],
+                             "e2e": m[3], "tput": m[4], "sim_us": us})
+
+    # headline aggregates vs vLLM
+    def agg(metric):
+        out = {}
+        for name in SYSTEMS:
+            out[name] = float(np.mean([r[metric] for r in rows
+                                       if r["system"] == name]))
+        return out
+
+    ttft, tpot, p99, tput = agg("ttft"), agg("tpot"), agg("p99_ttft"), \
+        agg("tput")
+    hi_tput = {name: float(np.mean(
+        [r["tput"] for r in rows
+         if r["system"] == name and r["rps"] == max(rates)]))
+        for name in SYSTEMS}
+    for name in SYSTEMS:
+        emit(f"fig9_end_to_end/{name}", 0.0,
+             f"ttft={ttft[name]:.3f}s;tpot={tpot[name]*1e3:.1f}ms;"
+             f"p99={p99[name]:.2f}s")
+    g, v = "gimbal", "vllm"
+    emit("fig9_end_to_end/gimbal_vs_vllm", 0.0,
+         f"ttft{ttft[g]/ttft[v]-1:+.1%}(paper-42.9%);"
+         f"tpot{tpot[g]/tpot[v]-1:+.1%}(paper-33.3%);"
+         f"p99{p99[g]/p99[v]-1:+.1%}(paper-44.3%)")
+    emit("fig10_throughput/gimbal_vs_vllm_highload", 0.0,
+         f"tput{hi_tput[g]/hi_tput[v]-1:+.1%}(paper+3.0%)")
+    save_json("fig9_end_to_end", {"rows": rows, "agg": {
+        "ttft": ttft, "tpot": tpot, "p99": p99, "tput": tput,
+        "hi_tput": hi_tput}})
+
+
+if __name__ == "__main__":
+    run()

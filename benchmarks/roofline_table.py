@@ -1,0 +1,45 @@
+"""§Roofline: render the per-cell roofline table from experiments/roofline."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit, save_json
+
+ROOF_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "experiments", "roofline")
+
+
+def rows():
+    out = []
+    for path in sorted(glob.glob(os.path.join(ROOF_DIR, "*.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def run() -> None:
+    table = rows()
+    if not table:
+        emit("roofline_table", 0.0, "no-roofline-artifacts-found")
+        return
+    for r in table:
+        if r.get("skip"):
+            emit(f"roofline/{r['arch']}/{r['shape']}", 0.0, "SKIP")
+            continue
+        if "error" in r:
+            emit(f"roofline/{r['arch']}/{r['shape']}", 0.0,
+                 f"ERROR:{r['error'][:60]}")
+            continue
+        emit(f"roofline/{r['arch']}/{r['shape']}", 0.0,
+             f"compute={r['compute_s']:.3e}s;memory={r['memory_s']:.3e}s;"
+             f"collective={r['collective_s']:.3e}s;"
+             f"bottleneck={r['bottleneck']};"
+             f"useful={r['useful_flops_ratio']:.3f};"
+             f"frac={r['roofline_fraction']:.4f}")
+    save_json("roofline_table", table)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,40 @@
+"""Benchmark driver: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines. Set REPRO_BENCH_FAST=1 for a
+reduced grid (used by CI-style smoke runs).
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+MODULES = [
+    "benchmarks.fig1_length_cdf",
+    "benchmarks.fig2_request_cost",
+    "benchmarks.fig3_expert_heatmap",
+    "benchmarks.fig4_cross_dp",
+    "benchmarks.fig6_calibration",
+    "benchmarks.fig13_collection_overhead",
+    "benchmarks.fig11_ablation",
+    "benchmarks.fig9_end_to_end",
+    "benchmarks.roofline_table",
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod_name in MODULES:
+        try:
+            mod = __import__(mod_name, fromlist=["run"])
+            mod.run()
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"{mod_name},0.0,FAILED")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

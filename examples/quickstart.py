@@ -1,0 +1,57 @@
+"""Quickstart: train a tiny MoE LM for a few steps, then serve one request.
+
+PYTHONPATH=src python examples/quickstart.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.models import build_model
+from repro.train import AdamWConfig, make_train_state, make_train_step
+
+
+def main():
+    cfg = get_smoke_config("qwen3-moe-30b-a3b")
+    fns = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = fns.init(key)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"model: {cfg.name} (smoke) — {n_params/1e6:.2f}M params, "
+          f"{cfg.moe.n_experts} experts top-{cfg.moe.top_k}")
+
+    state = make_train_state(params, AdamWConfig(lr=1e-3))
+    step = jax.jit(make_train_step(
+        lambda p, b: fns.loss(p, b), AdamWConfig(lr=1e-3)))
+
+    B, S = 8, 32
+    for i in range(30):
+        k = jax.random.fold_in(key, i)
+        toks = jax.random.randint(k, (B, S + 1), 0, cfg.vocab_size)
+        batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+        t0 = time.time()
+        state, metrics = step(state, batch)
+        if i % 5 == 0:
+            print(f"step {i:3d} loss={float(metrics['loss']):.4f} "
+                  f"ce={float(metrics['ce']):.4f} "
+                  f"({(time.time()-t0)*1000:.0f} ms)")
+
+    # serve one request with the trained params
+    cache = fns.init_cache(1, 64)
+    prompt = jax.random.randint(key, (1, 8), 0, cfg.vocab_size)
+    logits, cache, _ = jax.jit(fns.prefill)(
+        state.params, {"tokens": prompt,
+                       "lengths": jnp.asarray([8], jnp.int32)}, cache)
+    out = [int(jnp.argmax(logits[0]))]
+    lengths = jnp.asarray([8], jnp.int32)
+    for _ in range(8):
+        logits, cache, _ = jax.jit(fns.decode)(
+            state.params, jnp.asarray([out[-1]], jnp.int32), cache, lengths)
+        out.append(int(jnp.argmax(logits[0])))
+        lengths = lengths + 1
+    print("generated token ids:", out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Gimbal core: the paper's contribution.
+
+- traces:      async engine runtime-trace collection (§4.1)
+- scheduler:   pressure-aware DP-engine selection, Algorithm 1 (§4.2-4.3)
+- queue_policy: SJF-with-aging intra-engine ordering, Algorithm 2 (§4.4)
+- profiler:    online B[l,e] / A[l,s,e] expert-traffic statistics (§5.1)
+- placement:   source-aware greedy expert placement (§5.2-5.3)
+- minlp:       offline placement reference + (beta, gamma) calibration (§6)
+- coordinator: the cross-level feedback loop (§3)
+"""
+from repro.core.coordinator import CoordinatorConfig, GimbalCoordinator
+from repro.core.minlp import (CalibrationResult, anneal_layer,
+                              brute_force_layer, calibrate, solve_reference)
+from repro.core.placement import (PlacementConfig, PlacementManager,
+                                  assignment_to_permutation,
+                                  default_distance_matrix,
+                                  greedy_layer_placement, layer_objective,
+                                  torus_distance_matrix, total_objective)
+from repro.core.profiler import ExpertProfiler
+from repro.core.queue_policy import QueueConfig, order_queue, order_queue_fcfs
+from repro.core.scheduler import (BaselineScheduler, GimbalScheduler,
+                                  SchedulerConfig)
+from repro.core.traces import EngineTrace, TraceTable
+
+__all__ = [
+    "CoordinatorConfig", "GimbalCoordinator", "CalibrationResult",
+    "anneal_layer", "brute_force_layer", "calibrate", "solve_reference",
+    "PlacementConfig", "PlacementManager", "assignment_to_permutation",
+    "default_distance_matrix", "greedy_layer_placement", "layer_objective",
+    "torus_distance_matrix", "total_objective", "ExpertProfiler",
+    "QueueConfig", "order_queue", "order_queue_fcfs", "BaselineScheduler",
+    "GimbalScheduler", "SchedulerConfig", "EngineTrace", "TraceTable",
+]

@@ -1,0 +1,137 @@
+"""Cross-level coordination (paper §3, §5.3 closing paragraph).
+
+The coordinator owns the feedback loop:
+  1. MoE layers emit A/B statistics -> ExpertProfiler accumulates a window.
+  2. End of window: PlacementManager rebalances -> migration plan (+cost).
+  3. Per-rank expert load under the *current* placement is mapped onto the
+     co-located DP engines and written back into each engine's trace as
+     ``moe_pressure`` — which the DP scheduler consumes (Algorithm 1).
+Disabling step 3 gives the paper's "Gimbal-All (No Collaboration)" ablation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.placement import PlacementConfig, PlacementManager
+from repro.core.profiler import ExpertProfiler
+from repro.core.traces import TraceTable
+
+
+@dataclasses.dataclass(frozen=True)
+class CoordinatorConfig:
+    window_tokens: int = 200_000        # profiling window size
+    feedback: bool = True               # MoE pressure -> DP scheduler
+    rebalance: bool = True              # enable expert migration at all
+    # expert migration wall-time (paper §2.2.2: 1.08 s first / 0.72 s after
+    # for an ALL-layer rearrangement). Cost scales with experts moved:
+    # duration = base + per_move * n_moves (+ warmup once).
+    migration_base_s: float = 0.08
+    migration_per_move_s: float = 1.04e-4   # 0.72s at a full 48x128 reshuffle
+    migration_warmup_s: float = 0.36        # first rearrangement extra
+    moe_pressure_norm: float = 2000.0   # token-equivalents at 100% excess
+
+
+class GimbalCoordinator:
+    def __init__(self, n_moe_layers: int, n_experts: int, n_ranks: int,
+                 n_engines: int, cfg: Optional[CoordinatorConfig] = None,
+                 placement_cfg: Optional[PlacementConfig] = None,
+                 D: Optional[np.ndarray] = None,
+                 on_migration: Optional[Callable] = None,
+                 redundant_slots: int = 0):
+        self.cfg = cfg or CoordinatorConfig()
+        self.n_engines = n_engines
+        self.n_ranks = n_ranks
+        self.profiler = ExpertProfiler(n_moe_layers, n_experts, n_engines)
+        self.placement = PlacementManager(
+            n_moe_layers, n_experts, n_ranks, n_engines,
+            cfg=placement_cfg, D=D, redundant_slots=redundant_slots)
+        self.on_migration = on_migration
+        self._migrated_once = False
+        self._last_rank_load = np.zeros((max(n_moe_layers, 1), n_ranks))
+        self.migration_log: List[Dict] = []
+
+    # ---- rank <-> engine co-location (DP+TP+EP share physical chips) ---
+    def ranks_of_engine(self, engine_id: int) -> List[int]:
+        per = max(self.n_ranks // max(self.n_engines, 1), 1)
+        return [engine_id * per + i for i in range(per)
+                if engine_id * per + i < self.n_ranks]
+
+    # ---- window lifecycle ----------------------------------------------
+    def maybe_rebalance(self, now: float = 0.0) -> Tuple[bool, float]:
+        """If the window is full: snapshot, rebalance, migrate.
+        Returns (migrated, migration_seconds)."""
+        if self.profiler.window_tokens < self.cfg.window_tokens:
+            return False, 0.0
+        B, A = self.profiler.snapshot(reset=True)
+        if not self.cfg.rebalance:
+            self._last_rank_load = self.placement.per_rank_load(
+                B.astype(np.float64))
+            return False, 0.0
+        plan = self.placement.update(B, A)
+        # pressure signals reflect the window's traffic under the placement
+        # that will serve the NEXT window
+        self._last_rank_load = self.placement.per_rank_load(
+            B.astype(np.float64))
+        if not plan:
+            return False, 0.0
+        dur = self.migration_duration(len(plan))
+        self._migrated_once = True
+        self.migration_log.append(
+            {"t": now, "moves": len(plan), "duration_s": dur})
+        if self.on_migration is not None:
+            self.on_migration(plan, self.placement.permutations())
+        return True, dur
+
+    def migration_duration(self, n_moves: int) -> float:
+        dur = self.cfg.migration_base_s \
+            + self.cfg.migration_per_move_s * n_moves
+        if not self._migrated_once:
+            dur += self.cfg.migration_warmup_s
+        return dur
+
+    def engine_contention(self, engine_id: int) -> float:
+        """Relative load of the engine's co-located EP ranks vs the fleet
+        mean (>= 0 excess) — hot local ranks slow the co-located engine's
+        attention/dense compute (paper §2.2.3)."""
+        ranks = self.ranks_of_engine(engine_id)
+        total = float(self._last_rank_load.sum())
+        if not ranks or total <= 0:
+            return 0.0
+        mine = float(self._last_rank_load[:, ranks].sum())
+        expect = total * len(ranks) / self.n_ranks
+        return max(mine / max(expect, 1e-9) - 1.0, 0.0)
+
+    # ---- feedback: backend MoE pressure -> DP traces --------------------
+    def engine_moe_pressure(self, engine_id: int) -> float:
+        """Token-equivalent pressure from the engine's co-located EP ranks:
+        relative excess of its rank load vs the fleet mean (last window),
+        scaled into token units so Algorithm 1 can sum it with prefill/queue
+        pressure. Balanced backend => 0."""
+        if not self.cfg.feedback:
+            return 0.0
+        ranks = self.ranks_of_engine(engine_id)
+        if not ranks:
+            return 0.0
+        total = float(self._last_rank_load.sum())
+        if total <= 0:
+            return 0.0
+        mine = float(self._last_rank_load[:, ranks].sum())
+        expect = total * len(ranks) / self.n_ranks
+        rel_excess = mine / max(expect, 1e-9) - 1.0
+        return max(rel_excess, 0.0) * self.cfg.moe_pressure_norm
+
+    def cross_dp_fraction(self, A: np.ndarray) -> float:
+        """Fraction of routed tokens whose expert sits on a remote DP
+        group's ranks under the current placement (Fig. 4 metric)."""
+        total, remote = 0, 0.0
+        D = self.placement.D
+        for l in range(A.shape[0]):
+            rank_of_e = self.placement.assign[l]
+            for s in range(A.shape[1]):
+                w = A[l, s]
+                total += w.sum()
+                remote += w[D[s, rank_of_e] > 0].sum()
+        return float(remote) / max(float(total), 1.0)

@@ -1,0 +1,166 @@
+"""Offline MINLP placement reference + calibration (paper §5.3, §6, Fig. 6/8).
+
+The paper solves the full MINLP with a commercial solver offline (~15 s for
+48 layers) and uses it only as a calibration target for the online greedy.
+We do the same: per layer the problem decomposes into a capacitated
+assignment with a quadratic load term; the reference solver here is
+multi-start simulated annealing over swap/relocate moves seeded by the
+greedy — for the small instances used in tests it provably reaches the
+brute-force optimum (tests/test_placement.py).
+
+``calibrate`` reproduces the paper's calibration: fix alpha = 1.0, grid-search
+(beta, gamma) to maximize agreement of greedy decisions with the reference
+while keeping communication within a tolerance (paper: >= 80% agreement,
+comm within 0.6%).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.placement import (PlacementConfig, greedy_layer_placement,
+                                  layer_objective, total_objective)
+
+
+def brute_force_layer(B_l, A_l, D, prev, cfg: PlacementConfig) -> np.ndarray:
+    """Exact optimum by enumeration — tiny instances only (tests)."""
+    E = B_l.shape[0]
+    G = D.shape[1]
+    cap = -(-E // G)
+    best, best_obj = None, np.inf
+    for assign in itertools.product(range(G), repeat=E):
+        a = np.asarray(assign)
+        if np.max(np.bincount(a, minlength=G)) > cap:
+            continue
+        obj = total_objective(a, B_l, A_l, D, prev, cfg)
+        if obj < best_obj:
+            best, best_obj = a, obj
+    return best
+
+
+def anneal_layer(B_l, A_l, D, prev, cfg: PlacementConfig, *,
+                 iters: int = 4000, restarts: int = 3,
+                 seed: int = 0) -> np.ndarray:
+    """Simulated-annealing reference solver (the offline 'MINLP')."""
+    rng = np.random.default_rng(seed)
+    E = B_l.shape[0]
+    G = D.shape[1]
+    cap = -(-E // G)
+
+    def obj(a):
+        return total_objective(a, B_l, A_l, D, prev, cfg)
+
+    best = greedy_layer_placement(B_l, A_l, D, prev, cfg)
+    best_obj = obj(best)
+    for r in range(restarts):
+        if r == 0:
+            cur = best.copy()
+        else:
+            cur = rng.permutation(np.arange(E) % G).astype(np.int64)
+        cur_obj = obj(cur)
+        t0, t1 = max(cur_obj, 1.0) * 0.05, 1e-3
+        for i in range(iters):
+            t = t0 * (t1 / t0) ** (i / max(iters - 1, 1))
+            a = cur.copy()
+            u = rng.random()
+            if u < 0.45:             # swap two experts' ranks
+                e1, e2 = rng.integers(0, E, 2)
+                a[e1], a[e2] = a[e2], a[e1]
+            elif u < 0.55:           # relabel two ranks (migration symmetry:
+                g1, g2 = rng.integers(0, G, 2)   # load/comm-equivalent ranks
+                m1, m2 = a == g1, a == g2        # can differ in C_mig only)
+                a[m1], a[m2] = g2, g1
+            else:                    # relocate one expert if capacity allows
+                e = rng.integers(0, E)
+                g = rng.integers(0, G)
+                if np.sum(a == g) >= cap or g == a[e]:
+                    continue
+                a[e] = g
+            o = obj(a)
+            if o < cur_obj or rng.random() < np.exp((cur_obj - o) / max(t, 1e-9)):
+                cur, cur_obj = a, o
+                if o < best_obj:
+                    best, best_obj = a.copy(), o
+    return best
+
+
+def solve_reference(B, A, D, prev_stack, cfg: PlacementConfig,
+                    **kw) -> np.ndarray:
+    """Per-layer reference over the full (L, E) problem."""
+    L = B.shape[0]
+    out = np.zeros((L, B.shape[1]), np.int64)
+    for l in range(L):
+        prev = None if prev_stack is None else prev_stack[l]
+        out[l] = anneal_layer(B[l], A[l], D, prev, cfg,
+                              seed=kw.pop("seed", 0) + l, **kw)
+    return out
+
+
+@dataclasses.dataclass
+class CalibrationResult:
+    beta: float
+    gamma: float
+    agreement: float           # fraction of greedy decisions == reference
+    comm_excess: float         # greedy comm / reference comm - 1
+    grid: List[Tuple[float, float, float, float]]
+
+
+def _rank_groups(D: np.ndarray) -> np.ndarray:
+    """Equivalence classes of ranks with identical distance columns.
+
+    Ranks within a class are interchangeable for comm and load (they differ
+    only through migration history), so placement 'decisions' are compared
+    at this granularity — the finest level the objective can distinguish.
+    """
+    G = D.shape[1]
+    groups = np.zeros(G, np.int64)
+    seen = []
+    for g in range(G):
+        col = tuple(D[:, g])
+        if col not in seen:
+            seen.append(col)
+        groups[g] = seen.index(col)
+    return groups
+
+
+def calibrate(B, A, D, prev_stack, *, betas=None, gammas=None,
+              ref_cfg: Optional[PlacementConfig] = None,
+              seed: int = 0) -> CalibrationResult:
+    """Grid-search (beta, gamma) against the annealed reference (Fig. 6)."""
+    betas = betas if betas is not None else \
+        [0.0, 5e-4, 1e-3, 2.5e-3, 5e-3, 1e-2, 5e-2, 2e-1, 1.0]
+    gammas = gammas if gammas is not None else [0.0, 0.25, 0.5, 1.0, 2.0]
+    ref_cfg = ref_cfg or PlacementConfig()
+    L = B.shape[0]
+    grp = _rank_groups(D)
+
+    ref = solve_reference(B, A, D, prev_stack, ref_cfg, seed=seed)
+    ref_comm = sum(layer_objective(
+        ref[l], B[l], A[l], D,
+        None if prev_stack is None else prev_stack[l], ref_cfg)[1]
+        for l in range(L))
+
+    grid = []
+    best = None
+    for b in betas:
+        for g in gammas:
+            cfg = PlacementConfig(alpha=1.0, beta=b, gamma=g,
+                                  mig_cost_tokens=ref_cfg.mig_cost_tokens)
+            agree, comm = 0, 0.0
+            for l in range(L):
+                prev = None if prev_stack is None else prev_stack[l]
+                a = greedy_layer_placement(B[l], A[l], D, prev, cfg)
+                agree += int(np.sum(grp[a] == grp[ref[l]]))
+                comm += layer_objective(a, B[l], A[l], D, prev, cfg)[1]
+            agreement = agree / (L * B.shape[1])
+            excess = comm / max(ref_comm, 1e-9) - 1.0
+            grid.append((b, g, agreement, excess))
+            key = (agreement, -abs(excess))
+            if best is None or key > best[0]:
+                best = (key, b, g, agreement, excess)
+    _, b, g, agreement, excess = best
+    return CalibrationResult(beta=b, gamma=g, agreement=agreement,
+                             comm_excess=excess, grid=grid)

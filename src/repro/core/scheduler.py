@@ -1,0 +1,169 @@
+"""Fine-grained DP-engine scheduling (paper §4, Algorithm 1).
+
+Pressure-aware admission control: KV-protection fast path, score-based
+selection with compensation for dispatches made since the last trace refresh,
+and a CLOSE guard that falls back to ordered dispatch when scores are within
+noise (prevents oscillation on trace jitter).
+
+score_i = pre_rem_i + wait_i + comp_i + P_kv(kv_i) + P_moe(moe_i)
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.traces import EngineTrace, TraceTable
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    # KV protection (paper §6: HighKV at 90% usage, LargeGap at 10% spread)
+    high_kv: float = 0.90
+    large_gap: float = 0.10
+    # penalty shaping: token-equivalent pressure per unit of kv/moe signal
+    kv_penalty_scale: float = 2000.0     # tokens-equivalent at kv_usage = 1.0
+    kv_penalty_knee: float = 0.5         # quadratic growth past the knee
+    moe_penalty_scale: float = 1.0       # moe_pressure is token-equivalent
+    # CLOSE guard: relative score band treated as "equal" (ordered dispatch)
+    close_rel: float = 0.02
+    close_abs: float = 32.0              # tokens
+    # compensation: how much pressure one dispatched request adds until the
+    # next trace arrives (its own prefill tokens + fixed decode allowance)
+    comp_decode_allowance: float = 64.0
+    comp_decay_s: float = 2.0            # compensation half-life (safety)
+
+
+class GimbalScheduler:
+    """Algorithm 1 (global DP engine scheduling)."""
+
+    def __init__(self, trace_table: TraceTable,
+                 config: Optional[SchedulerConfig] = None):
+        self.traces = trace_table
+        self.cfg = config or SchedulerConfig()
+        self._rr = itertools.count()
+        self._comp: Dict[int, float] = {}
+        self._comp_time: Dict[int, float] = {}
+        self._excluded: set = set()
+        # per-decision telemetry for the benchmarks/ablation
+        self.decisions = {"fallback": 0, "kv_path": 0, "score_path": 0,
+                          "close_path": 0}
+
+    # ---- engine set management (elastic scaling / health) ------------
+    def exclude(self, engine_id: int) -> None:
+        self._excluded.add(engine_id)
+
+    def include(self, engine_id: int) -> None:
+        self._excluded.discard(engine_id)
+
+    def _engines(self) -> List[int]:
+        return [e for e in self.traces.engine_ids if e not in self._excluded]
+
+    # ---- compensation -------------------------------------------------
+    def _compensation(self, engine_id: int, now: float) -> float:
+        c = self._comp.get(engine_id, 0.0)
+        if c <= 0.0:
+            return 0.0
+        dt = max(now - self._comp_time.get(engine_id, now), 0.0)
+        decay = 0.5 ** (dt / self.cfg.comp_decay_s)
+        return c * decay
+
+    def _add_compensation(self, engine_id: int, tokens: float,
+                          now: float) -> None:
+        self._comp[engine_id] = (self._compensation(engine_id, now)
+                                 + tokens + self.cfg.comp_decode_allowance)
+        self._comp_time[engine_id] = now
+
+    def on_trace_refresh(self, engine_id: int) -> None:
+        """A fresh trace subsumes compensation for that engine."""
+        self._comp[engine_id] = 0.0
+
+    # ---- penalties -----------------------------------------------------
+    def _p_kv(self, kv: float) -> float:
+        c = self.cfg
+        over = max(kv - c.kv_penalty_knee, 0.0)
+        return c.kv_penalty_scale * (kv + 4.0 * over * over)
+
+    def _p_moe(self, moe: float) -> float:
+        return self.cfg.moe_penalty_scale * moe
+
+    def score(self, t: EngineTrace, now: float) -> float:
+        return (t.remaining_prefill_tokens + t.waiting_prefill_tokens
+                + self._compensation(t.engine_id, now)
+                + self._p_kv(t.kv_usage) + self._p_moe(t.moe_pressure))
+
+    # ---- Algorithm 1 ----------------------------------------------------
+    def _ordered_next(self, engines: List[int]) -> int:
+        return engines[next(self._rr) % len(engines)]
+
+    def select_engine(self, prefill_tokens: float, now: float = 0.0) -> int:
+        engines = self._engines()
+        if not engines:
+            raise RuntimeError("no healthy engines")
+        traces = {e: self.traces.get(e) for e in engines}
+
+        # line 1-2: incomplete traces -> ordered dispatch
+        if any(t is None for t in traces.values()):
+            self.decisions["fallback"] += 1
+            chosen = self._ordered_next(engines)
+            self._add_compensation(chosen, prefill_tokens, now)
+            return chosen
+
+        # line 6-9: KV protection path
+        kv = {e: t.kv_usage for e, t in traces.items()}
+        e_min = min(engines, key=lambda e: (kv[e], e))
+        e_max = max(engines, key=lambda e: (kv[e], -e))
+        if kv[e_max] >= self.cfg.high_kv and \
+                kv[e_max] - kv[e_min] >= self.cfg.large_gap:
+            self.decisions["kv_path"] += 1
+            self._add_compensation(e_min, prefill_tokens, now)
+            return e_min
+
+        # line 10-12: pressure scores
+        scores = {e: self.score(traces[e], now) for e in engines}
+        s_min = min(scores.values())
+        s_max = max(scores.values())
+
+        # line 13-16: CLOSE guard -> ordered dispatch
+        band = max(self.cfg.close_abs,
+                   self.cfg.close_rel * max(abs(s_max), 1.0),
+                   0.05 * prefill_tokens)
+        if s_max - s_min <= band:
+            self.decisions["close_path"] += 1
+            chosen = self._ordered_next(engines)
+            self._add_compensation(chosen, prefill_tokens, now)
+            return chosen
+
+        # line 17: argmin by (score, kv, id)
+        self.decisions["score_path"] += 1
+        chosen = min(engines, key=lambda e: (scores[e], kv[e], e))
+        self._add_compensation(chosen, prefill_tokens, now)
+        return chosen
+
+
+class BaselineScheduler:
+    """vLLM-style baselines for the benchmark harness."""
+
+    def __init__(self, trace_table: TraceTable, policy: str = "round_robin"):
+        assert policy in ("round_robin", "least_requests")
+        self.traces = trace_table
+        self.policy = policy
+        self._rr = itertools.count()
+        self._inflight: Dict[int, int] = {}
+
+    def select_engine(self, prefill_tokens: float, now: float = 0.0) -> int:
+        engines = self.traces.engine_ids
+        if self.policy == "round_robin":
+            return engines[next(self._rr) % len(engines)]
+        # least_requests: request-count dispatch (coarse signal, the paper's
+        # motivating strawman)
+        def count(e):
+            t = self.traces.get(e)
+            base = (t.n_running + t.n_waiting) if t is not None else 0
+            return base + self._inflight.get(e, 0)
+        chosen = min(engines, key=lambda e: (count(e), e))
+        self._inflight[chosen] = self._inflight.get(chosen, 0) + 1
+        return chosen
+
+    def on_trace_refresh(self, engine_id: int) -> None:
+        self._inflight[engine_id] = 0

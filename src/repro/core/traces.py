@@ -1,0 +1,76 @@
+"""Runtime trace collection (paper §4.1).
+
+Each backend DP engine periodically and asynchronously reports a compact
+trace: remaining prefill tokens of running requests, waiting prefill tokens
+in the local queue, KV-cache usage, and backend MoE expert pressure. The
+scheduler always reads the *latest available* trace (never blocks request
+admission on freshness) and relies on the compensation term (scheduler.py)
+to bridge staleness — exactly the paper's async design.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional
+
+
+@dataclasses.dataclass
+class EngineTrace:
+    """One engine's compact runtime state (a handful of scalars)."""
+
+    engine_id: int
+    remaining_prefill_tokens: float = 0.0   # unfinished prefill of RUNNING reqs
+    waiting_prefill_tokens: float = 0.0     # prefill tokens queued locally
+    kv_usage: float = 0.0                   # fraction of KV budget in use [0,1]
+    moe_pressure: float = 0.0               # normalized token-equivalent expert
+                                            # load on this engine's EP ranks
+    n_running: int = 0
+    n_waiting: int = 0
+    timestamp: float = 0.0
+
+    def copy(self) -> "EngineTrace":
+        return dataclasses.replace(self)
+
+
+class TraceTable:
+    """Latest-trace store, written by engines, read by the DP scheduler."""
+
+    def __init__(self, engine_ids):
+        self._traces: Dict[int, Optional[EngineTrace]] = {
+            e: None for e in engine_ids}
+
+    @property
+    def engine_ids(self):
+        return list(self._traces.keys())
+
+    def report(self, trace: EngineTrace, now: Optional[float] = None) -> None:
+        trace.timestamp = time.time() if now is None else now
+        self._traces[trace.engine_id] = trace
+
+    def get(self, engine_id: int) -> Optional[EngineTrace]:
+        return self._traces.get(engine_id)
+
+    def complete(self) -> bool:
+        """True once every engine has reported at least once (Alg. 1 line 1)."""
+        return all(t is not None for t in self._traces.values())
+
+    def snapshot(self) -> Dict[int, EngineTrace]:
+        return {e: t.copy() for e, t in self._traces.items() if t is not None}
+
+    def add_engine(self, engine_id: int) -> None:
+        """Elastic scale-up: new engine starts with no trace (ordered dispatch
+        covers it until its first report)."""
+        self._traces.setdefault(engine_id, None)
+
+    def remove_engine(self, engine_id: int) -> None:
+        self._traces.pop(engine_id, None)
+
+    def stale_engines(self, timeout_s: float, now: Optional[float] = None):
+        """Engines whose last report is older than ``timeout_s`` (health /
+        straggler detection — see serving/health.py)."""
+        now = time.time() if now is None else now
+        out = []
+        for e, t in self._traces.items():
+            if t is not None and now - t.timestamp > timeout_s:
+                out.append(e)
+        return out

@@ -1,0 +1,6 @@
+from repro.distributed.sharding import (ShardingPolicy, batch_specs,
+                                        cache_specs_tree, make_param_specs,
+                                        make_policy)
+
+__all__ = ["ShardingPolicy", "batch_specs", "cache_specs_tree",
+           "make_param_specs", "make_policy"]

@@ -1,0 +1,277 @@
+"""Sharding policy: how every (arch x shape x mesh x mode) cell is partitioned.
+
+Axes: ``model`` hosts TP for dense ops and EP for experts; the data axes
+(``data``, plus ``pod`` on the multi-pod mesh) host DP-engine replicas of
+attention/dense compute, FSDP parameter sharding in training, and — for
+single-request long-context decode — split-K KV sharding. This mirrors the
+paper's DP+TP+EP deployment (attention replicated per DP group, experts
+partitioned across the whole pod) at 256/512-chip scale. See DESIGN.md §4.
+"""
+from __future__ import annotations
+
+import dataclasses
+from math import prod
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    mesh: Mesh
+    batch_axes: Tuple[str, ...]        # activation batch-dim axes
+    fsdp_axes: Tuple[str, ...]         # param sharding over data axes (train)
+    model_axis: str = "model"
+    expert_data_shard: bool = False    # shard expert FFN dim over data axes
+    expert_rowparallel: bool = True    # constrain expert activations on F
+                                       # (row-parallel: all-reduce outputs) vs
+                                       # weight-gather (all-gather weights)
+    kv_split: int = 1                  # split-K decode shards (B < data size)
+    kv_split_axes: Tuple[str, ...] = ()
+
+    # ---- helpers -----------------------------------------------------
+    @property
+    def model_size(self) -> int:
+        return self.mesh.shape[self.model_axis]
+
+    def _ns(self, *spec):
+        return NamedSharding(self.mesh, P(*spec))
+
+    def cs(self, x, *spec):
+        """with_sharding_constraint, skipping non-divisible dims."""
+        clean = []
+        for dim, s in zip(x.shape, spec):
+            if s is None:
+                clean.append(None)
+                continue
+            axes = (s,) if isinstance(s, str) else tuple(s)
+            size = prod(self.mesh.shape[a] for a in axes)
+            clean.append(s if dim % size == 0 else None)
+        return jax.lax.with_sharding_constraint(x, self._ns(*clean))
+
+    # ---- activation constraints used inside model code ---------------
+    def shard_resid(self, x):
+        if x.ndim == 3:    # (B, S, D)
+            return self.cs(x, self.batch_axes or None, None, None)
+        return x
+
+    def shard_heads(self, t):
+        # (B, S, H, hd): TP over heads when divisible (cs() checks)
+        return self.cs(t, self.batch_axes or None, None, self.model_axis, None)
+
+    def shard_ffn_act(self, h):
+        if h.ndim == 3:    # (B, S, F)
+            return self.cs(h, self.batch_axes or None, None, self.model_axis)
+        if h.ndim == 2:    # (T, F)
+            return self.cs(h, self.batch_axes or None, self.model_axis)
+        return h
+
+    def shard_expert_act(self, xe):
+        # (E, C, D): experts over the EP(model) axis
+        return self.cs(xe, self.model_axis, None, None)
+
+    def shard_dispatch_rows(self, t):
+        # (B, rows, D): row-major dispatch buffers stay on the DP axes so
+        # the layout change to (E{model}, ...) lowers to an all-to-all
+        # instead of an all-gather [§Perf iteration A2]
+        if t.ndim == 3:
+            return self.cs(t, self.batch_axes or None, None, None)
+        return t
+
+    def shard_expert_ffn(self, h):
+        # (E, C, F): optionally TP the expert FFN over data (huge MoE).
+        # Row-parallel (F sharded) reduces outputs; disabling it makes XLA
+        # gather the (smaller) weights instead [§Perf iteration C1].
+        if self.expert_data_shard and self.expert_rowparallel:
+            f_axes = self.fsdp_axes or ("data",)
+            return self.cs(h, self.model_axis, None, f_axes)
+        return self.cs(h, self.model_axis, None, None)
+
+    def shard_kv_cache(self, c):
+        # (B, L, Hkv, hd) (superblock slice)
+        if self.kv_split > 1 and c.shape[1] % self.kv_split == 0:
+            return self.cs(c, self.batch_axes or None, self.kv_split_axes,
+                           None, None)
+        return self.cs(c, self.batch_axes or None, None, None, None)
+
+    def shard_kv_scale(self, c):
+        # (B, L, Hkv) int8-KV scale array
+        if self.kv_split > 1 and c.shape[1] % self.kv_split == 0:
+            return self.cs(c, self.batch_axes or None, self.kv_split_axes,
+                           None)
+        return self.cs(c, self.batch_axes or None, None, None)
+
+
+def _divides(b: int, sizes) -> bool:
+    return b % prod(sizes) == 0 and b >= prod(sizes)
+
+
+def make_policy(cfg: ModelConfig, shape: Optional[ShapeConfig], mesh: Mesh,
+                mode: str) -> ShardingPolicy:
+    """mode: 'train' | 'serve'."""
+    axes = tuple(mesh.axis_names)
+    data_axes = tuple(a for a in axes if a != "model")
+    dsizes = [mesh.shape[a] for a in data_axes]
+    msz = mesh.shape["model"]
+
+    B = shape.global_batch if shape is not None else 0
+    # longest suffix of data axes whose product divides B
+    batch_axes: Tuple[str, ...] = ()
+    for i in range(len(data_axes)):
+        cand = data_axes[i:]
+        if _divides(B, [mesh.shape[a] for a in cand]):
+            batch_axes = cand
+            break
+
+    fsdp_axes = data_axes if mode == "train" else ()
+
+    # serving: shard expert FFN dim over data axes when the model-axis-only
+    # footprint would blow the 16 GB/chip HBM budget (llama4-400b)
+    param_bytes = cfg.param_count() * 2  # bf16
+    expert_data_shard = (mode == "serve" and cfg.moe.enabled
+                         and param_bytes / msz > 8e9) or \
+                        (mode == "train" and cfg.moe.enabled)
+
+    # KV caches split their sequence dim over the model axis (split-K flash
+    # decode / sharded prefill cache); with no batch parallelism (B=1
+    # long-context) the data axes join the split too.
+    kv_split, kv_axes = 1, ()
+    if shape is not None and shape.kind in ("decode", "prefill"):
+        kv_axes = ("model",) if batch_axes else data_axes + ("model",)
+        kv_split = prod(mesh.shape[a] for a in kv_axes)
+
+    return ShardingPolicy(
+        mesh=mesh, batch_axes=batch_axes, fsdp_axes=fsdp_axes,
+        expert_data_shard=expert_data_shard, kv_split=kv_split,
+        kv_split_axes=kv_axes)
+
+
+# ---------------------------------------------------------------- params
+# rules: leaf-name -> (base_ndim, spec builder). Specs cover the LAST k dims;
+# extra leading (stacked) dims are padded with None.
+def _param_rule(name: str, path_names, cfg: ModelConfig,
+                pol: ShardingPolicy):
+    fsdp = pol.fsdp_axes or None
+    M = pol.model_axis
+    eds = pol.fsdp_axes if (pol.expert_data_shard and pol.fsdp_axes) else \
+        (("data",) if pol.expert_data_shard else None)
+    in_moe = "moe" in path_names
+    if name == "embedding":
+        return 2, (M, fsdp)
+    if name == "lm_head":
+        return 2, (fsdp, M)
+    if name == "router":
+        return 2, (fsdp, None)
+    if in_moe and name in ("w_gate", "w_up"):
+        return 3, (M, None, eds)
+    if in_moe and name == "w_down":
+        return 3, (M, eds, None)
+    if name in ("w_gate", "w_up", "w_in", "wq", "wk", "wv", "in_proj",
+                "w_u", "w_q", "w_k", "w_bc", "w_dt", "enc_in"):
+        return 2, (fsdp, M)
+    if name in ("w_down", "wo", "w_o", "out_proj"):
+        return 2, (M, fsdp)
+    if name in ("bq", "bk", "bv"):
+        return 1, (M,)
+    if name == "conv":
+        return 2, (None, M)
+    if name == "a_log":
+        return 2, (M, None)
+    return None  # replicate
+
+
+def make_param_specs(abstract_params, cfg: ModelConfig, pol: ShardingPolicy):
+    """PartitionSpec tree matching the params pytree."""
+    def visit(path, leaf):
+        names = [getattr(p, "key", getattr(p, "name", None)) or str(p)
+                 for p in path]
+        name = names[-1] if names else ""
+        rule = _param_rule(name, names, cfg, pol)
+        nd = leaf.ndim
+        if rule is None:
+            return P()
+        base_nd, spec = rule
+        if nd < base_nd:
+            return P()
+        pad = (None,) * (nd - base_nd)
+        full = pad + tuple(spec)
+        # drop non-divisible shardings
+        clean = []
+        for dim, s in zip(leaf.shape, full):
+            if s is None:
+                clean.append(None)
+                continue
+            axes = (s,) if isinstance(s, str) else tuple(s)
+            size = prod(pol.mesh.shape[a] for a in axes)
+            clean.append(s if dim % size == 0 else None)
+        return P(*clean)
+
+    return jax.tree_util.tree_map_with_path(visit, abstract_params)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, pol: ShardingPolicy,
+                batch_tree):
+    """PartitionSpec tree for a batch/tokens/lengths pytree."""
+    ba = pol.batch_axes or None
+
+    def visit(path, leaf):
+        if leaf.ndim == 0:
+            return P()
+        spec = [ba] + [None] * (leaf.ndim - 1)
+        if ba is not None:
+            size = prod(pol.mesh.shape[a]
+                        for a in ((ba,) if isinstance(ba, str) else ba))
+            if leaf.shape[0] % size:
+                spec[0] = None
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(visit, batch_tree)
+
+
+def cache_specs_tree(cfg: ModelConfig, pol: ShardingPolicy, cache_tree):
+    """Specs for KV/state caches: (ns, B, L, H, hd) + mamba/encdec layouts."""
+    ba = pol.batch_axes or None
+
+    def visit(path, leaf):
+        names = [getattr(p, "key", str(p)) for p in path]
+        name = names[-1] if names else ""
+        nd = leaf.ndim
+        if name in ("k", "v", "xk", "xv") and nd == 5:
+            b_ok = _cache_b_ok(leaf, 1, ba, pol)
+            l_ok = pol.kv_split > 1 and leaf.shape[2] % pol.kv_split == 0
+            return P(None, ba if b_ok else None,
+                     pol.kv_split_axes if l_ok else None, None, None)
+        if name in ("k_scale", "v_scale") and nd == 4:
+            b_ok = _cache_b_ok(leaf, 1, ba, pol)
+            l_ok = pol.kv_split > 1 and leaf.shape[2] % pol.kv_split == 0
+            return P(None, ba if b_ok else None,
+                     pol.kv_split_axes if l_ok else None, None)
+        if name == "mamba_h" and nd == 4:    # (ns, B, d_in, N)
+            return P(None, ba, pol.model_axis, None) \
+                if _cache_b_ok(leaf, 1, ba, pol) else \
+                P(None, None, pol.model_axis, None)
+        if name == "mamba_conv" and nd == 4:  # (ns, B, w-1, d_in)
+            return P(None, ba, None, pol.model_axis) \
+                if _cache_b_ok(leaf, 1, ba, pol) else \
+                P(None, None, None, pol.model_axis)
+        if name in ("C",) and nd == 4:        # mLSTM (B, H, hd, hd)
+            return P(ba if _cache_b_ok(leaf, 0, ba, pol) else None,
+                     None, None, None)
+        if nd >= 1 and ba is not None and _cache_b_ok(leaf, 0, ba, pol):
+            return P(*([ba] + [None] * (nd - 1)))
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(visit, cache_tree)
+
+
+def _cache_b_ok(leaf, b_dim, ba, pol) -> bool:
+    if ba is None:
+        return False
+    axes = (ba,) if isinstance(ba, str) else tuple(ba)
+    size = prod(pol.mesh.shape[a] for a in axes)
+    return leaf.shape[b_dim] % size == 0 and leaf.shape[b_dim] >= size

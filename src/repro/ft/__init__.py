@@ -1,0 +1,9 @@
+from repro.ft.checkpoint import (checkpoint_step, restore_checkpoint,
+                                 restore_serving_state, save_checkpoint,
+                                 save_serving_state)
+from repro.ft.elastic import ElasticController
+from repro.ft.health import EngineHealthMonitor, HealthConfig
+
+__all__ = ["checkpoint_step", "restore_checkpoint", "restore_serving_state",
+           "save_checkpoint", "save_serving_state", "ElasticController",
+           "EngineHealthMonitor", "HealthConfig"]

@@ -1,0 +1,97 @@
+"""Flash-decode attention kernel (single-token decode against a KV cache).
+
+Grid iterates KV blocks sequentially (TPU grids are sequential on the last
+dim); the running (m, l, acc) softmax state lives in VMEM scratch across
+iterations, so the working set is one (Lb, hd) KV tile per head group —
+the structure that makes 32k/500k-context decode HBM-bandwidth-bound
+instead of VMEM-capacity-bound. Invalid cache slots carry k_pos = -1.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, kpos_ref, qpos_ref, o_ref,
+            m_scr, l_scr, acc_scr, *, scale, n_blocks):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]                                  # (Hq, hd)
+    k = k_ref[0]                                  # (Lb, Hkv, hd)
+    v = v_ref[0]
+    kpos = kpos_ref[0]                            # (Lb,)
+    qpos = qpos_ref[0, 0]                         # scalar
+
+    Hq, hd = q.shape
+    Lb, Hkv, _ = k.shape
+    G = Hq // Hkv
+    qg = q.reshape(Hkv, G, hd)
+
+    s = jnp.einsum("kgd,lkd->kgl", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale      # (Hkv, G, Lb)
+    valid = (kpos >= 0) & (kpos <= qpos)
+    s = jnp.where(valid[None, None, :], s, NEG_INF)
+
+    m_prev = m_scr[...]                                # (Hkv, G)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    p = jnp.where(valid[None, None, :], p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_scr[...] * corr + jnp.sum(p, axis=-1)
+    acc_scr[...] = acc_scr[...] * corr[..., None] + jnp.einsum(
+        "kgl,lkd->kgd", p, v.astype(jnp.float32))
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(j == n_blocks - 1)
+    def _finish():
+        out = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)[..., None]
+        o_ref[0] = out.reshape(Hq, hd).astype(o_ref.dtype)
+
+
+def flash_decode(q, k_cache, v_cache, k_pos, q_pos, *, l_block: int = 1024,
+                 interpret: bool = False):
+    """q (B, Hq, hd); caches (B, L, Hkv, hd); k_pos (B, L); q_pos (B,)."""
+    B, Hq, hd = q.shape
+    _, L, Hkv, _ = k_cache.shape
+    lb = min(l_block, L)
+    assert L % lb == 0
+    n_blocks = L // lb
+    scale = 1.0 / np.sqrt(hd)
+    G = Hq // Hkv
+
+    kernel = functools.partial(_kernel, scale=scale, n_blocks=n_blocks)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, Hq, hd), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, lb, Hkv, hd), lambda b, j: (b, j, 0, 0)),
+            pl.BlockSpec((1, lb, Hkv, hd), lambda b, j: (b, j, 0, 0)),
+            pl.BlockSpec((1, lb), lambda b, j: (b, j)),
+            pl.BlockSpec((1, 1), lambda b, j: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Hq, hd), lambda b, j: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((Hkv, G), jnp.float32),        # running max m
+            pltpu.VMEM((Hkv, G), jnp.float32),        # running sum l
+            pltpu.VMEM((Hkv, G, hd), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k_cache, v_cache, k_pos.astype(jnp.int32),
+      q_pos[:, None].astype(jnp.int32))

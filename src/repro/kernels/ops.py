@@ -1,0 +1,43 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode for
+correctness validation; on TPU they compile natively. The wrappers pick the
+mode from the backend at trace time.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_decode import flash_decode as _flash_decode
+from repro.kernels.moe_gmm import moe_gmm as _moe_gmm
+from repro.kernels.source_expert_count import \
+    source_expert_count as _source_expert_count
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("n_experts", "n_sources"))
+def source_expert_count(expert_idx, source_ids, *, n_experts: int,
+                        n_sources: int):
+    """Fused B[e] / A[s, e] collection (the paper's Fig. 13 fast path)."""
+    return _source_expert_count(expert_idx, source_ids,
+                                n_experts=n_experts, n_sources=n_sources,
+                                interpret=_interpret())
+
+
+@jax.jit
+def moe_gmm(x, w):
+    """Grouped expert matmul: (E, C, D) x (E, D, F) -> (E, C, F)."""
+    return _moe_gmm(x, w, interpret=_interpret())
+
+
+@jax.jit
+def flash_decode(q, k_cache, v_cache, k_pos, q_pos):
+    """Single-token decode attention against a (ring) KV cache."""
+    return _flash_decode(q, k_cache, v_cache, k_pos, q_pos,
+                         interpret=_interpret())

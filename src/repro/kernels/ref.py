@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def source_expert_count_ref(expert_idx, source_ids, *, n_experts: int,
+                            n_sources: int):
+    """Scatter-add reference. expert_idx (T, K); source_ids (T,)."""
+    flat = expert_idx.reshape(-1)
+    valid = flat >= 0
+    b = jnp.zeros((n_experts,), jnp.int32).at[
+        jnp.where(valid, flat, 0)].add(valid.astype(jnp.int32))
+    k = expert_idx.shape[-1]
+    src = jnp.repeat(source_ids, k)
+    sv = valid & (src >= 0)
+    a = jnp.zeros((n_sources, n_experts), jnp.int32).at[
+        jnp.where(sv, src, 0), jnp.where(sv, flat, 0)].add(
+        sv.astype(jnp.int32))
+    return b, a
+
+
+def moe_gmm_ref(x, w):
+    """x (E, C, D) @ w (E, D, F) -> (E, C, F) in fp32."""
+    return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                      w.astype(jnp.float32))
+
+
+def flash_decode_ref(q, k_cache, v_cache, k_pos, q_pos):
+    """Masked softmax attention oracle. q (B, Hq, hd)."""
+    B, Hq, hd = q.shape
+    _, L, Hkv, _ = k_cache.shape
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, hd).astype(jnp.float32)
+    k = k_cache.astype(jnp.float32)
+    v = v_cache.astype(jnp.float32)
+    s = jnp.einsum("bkgd,blkd->bkgl", qg, k) / np.sqrt(hd)
+    valid = (k_pos >= 0) & (k_pos <= q_pos[:, None])
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgl,blkd->bkgd", p, v)
+    return out.reshape(B, Hq, hd).astype(q.dtype)

@@ -1,0 +1,86 @@
+"""Fused source-aware expert-statistics kernel (the paper's Triton kernel,
+TPU-adapted — DESIGN.md §3.2).
+
+Computes, in one pass over the router output:
+  B[e]    — tokens routed to expert e            (aggregate load)
+  A[s, e] — tokens from DP source s to expert e  (source-aware matrix)
+
+The Triton original uses global atomics. TPUs have none; the TPU-native
+formulation is a *blocked one-hot matmul*: per token tile, build
+onehot_src (Tb, S) and onehot_exp (Tb, E) in VMEM and accumulate
+A += onehot_srcᵀ · onehot_exp on the MXU, with B as a row-sum — fused with
+the expert-id readout so no second pass over routing data is needed.
+Counts accumulate in fp32 (exact to 2^24 — far beyond any window size).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(eidx_ref, src_ref, b_ref, a_ref, *, n_experts, n_sources, top_k):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        b_ref[...] = jnp.zeros_like(b_ref)
+        a_ref[...] = jnp.zeros_like(a_ref)
+
+    eidx = eidx_ref[...]                     # (Tb, K) int32
+    src = src_ref[...]                       # (Tb, 1) int32
+    Tb = eidx.shape[0]
+
+    e_iota = jax.lax.broadcasted_iota(jnp.int32, (Tb, n_experts), 1)
+    onehot_e = jnp.zeros((Tb, n_experts), jnp.float32)
+    for k in range(top_k):                   # K is small and static
+        onehot_e += (eidx[:, k][:, None] == e_iota).astype(jnp.float32)
+
+    s_iota = jax.lax.broadcasted_iota(jnp.int32, (Tb, n_sources), 1)
+    onehot_s = (src == s_iota).astype(jnp.float32)
+
+    b_ref[...] += jnp.sum(onehot_e, axis=0, keepdims=True)
+    a_ref[...] += jax.lax.dot_general(
+        onehot_s, onehot_e, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)  # (S, E) MXU accumulation
+
+
+def source_expert_count(expert_idx, source_ids, *, n_experts: int,
+                        n_sources: int, t_block: int = 1024,
+                        interpret: bool = False):
+    """expert_idx (T, K) int32, source_ids (T,) int32 -> (B (E,), A (S, E)).
+
+    T is padded to a t_block multiple; padded rows carry source_id = -1 and
+    expert_id = -1 and match no one-hot column, so they count nowhere.
+    """
+    T, K = expert_idx.shape
+    n_t = -(-T // t_block)
+    pad = n_t * t_block - T
+    if pad:
+        expert_idx = jnp.pad(expert_idx, ((0, pad), (0, 0)),
+                             constant_values=-1)
+        source_ids = jnp.pad(source_ids, (0, pad), constant_values=-1)
+    src2d = source_ids[:, None].astype(jnp.int32)
+
+    kernel = functools.partial(_kernel, n_experts=n_experts,
+                               n_sources=n_sources, top_k=K)
+    b, a = pl.pallas_call(
+        kernel,
+        grid=(n_t,),
+        in_specs=[
+            pl.BlockSpec((t_block, K), lambda i: (i, 0)),
+            pl.BlockSpec((t_block, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, n_experts), lambda i: (0, 0)),
+            pl.BlockSpec((n_sources, n_experts), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, n_experts), jnp.float32),
+            jax.ShapeDtypeStruct((n_sources, n_experts), jnp.float32),
+        ],
+        interpret=interpret,
+    )(expert_idx.astype(jnp.int32), src2d)
+    return b[0].astype(jnp.int32), a.astype(jnp.int32)

@@ -1,0 +1,164 @@
+"""Cell builder: (arch x shape x mesh) -> jit-able function + abstract args.
+
+Shared by the dry-run CLI, the roofline analyzer, and the perf harness.
+No jax device state is touched at import time.
+"""
+from __future__ import annotations
+
+import dataclasses
+from math import prod
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ModelConfig, ShapeConfig, get_config, get_shape
+from repro.distributed.sharding import (batch_specs, cache_specs_tree,
+                                        make_param_specs, make_policy)
+from repro.models import api as model_api
+from repro.models.api import build_model
+from repro.train import AdamWConfig, TrainState, make_train_state, \
+    make_train_step
+from repro.train.optimizer import init_opt_state
+
+
+class Cell(NamedTuple):
+    cfg: ModelConfig
+    shape: ShapeConfig
+    mesh: Mesh
+    policy: Any
+    fn: Any                   # the function to jit
+    args: Tuple[Any, ...]     # abstract args (ShapeDtypeStruct trees)
+    in_shardings: Tuple[Any, ...]
+    skip_reason: Optional[str]
+
+
+def cell_is_skipped(cfg: ModelConfig, shape: ShapeConfig) -> Optional[str]:
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return ("pure full-attention stack: 500k-token KV per layer exceeds "
+                "the sub-quadratic requirement (DESIGN.md §4)")
+    return None
+
+
+def _ns_tree(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _abstract_params(fns):
+    return jax.eval_shape(lambda: fns.init(jax.random.PRNGKey(0)))
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh,
+               moment_dtype: str = "bfloat16",
+               policy_overrides: Optional[Dict[str, Any]] = None) -> Cell:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    skip = cell_is_skipped(cfg, shape)
+    if skip:
+        return Cell(cfg, shape, mesh, None, None, (), (), skip)
+
+    mode = "train" if shape.kind == "train" else "serve"
+    policy = make_policy(cfg, shape, mesh, mode)
+    if policy_overrides:
+        policy = dataclasses.replace(policy, **policy_overrides)
+    fns = build_model(cfg)
+    aparams = _abstract_params(fns)
+    pspecs = make_param_specs(aparams, cfg, policy)
+    specs = model_api.input_specs(cfg, shape)
+    data_axes = tuple(a for a in mesh.axis_names if a != "model")
+    n_src = prod(mesh.shape[a] for a in data_axes)
+
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig(moment_dtype=moment_dtype)
+        astate = TrainState(
+            params=aparams,
+            opt=jax.eval_shape(lambda p: init_opt_state(p, opt_cfg), aparams))
+        # optimizer state shards like params (scalars replicated)
+        ospecs = TrainState(
+            params=pspecs,
+            opt=jax.eval_shape(
+                lambda p: init_opt_state(p, opt_cfg), aparams).__class__(
+                step=P(),
+                mu=pspecs if moment_dtype != "int8" else jax.tree.map(
+                    lambda _: P(), astate.opt.mu),
+                nu=pspecs if moment_dtype != "int8" else jax.tree.map(
+                    lambda _: P(), astate.opt.nu),
+                mu_scale=jax.tree.map(lambda _: P(), astate.opt.mu_scale),
+                nu_scale=jax.tree.map(lambda _: P(), astate.opt.nu_scale)))
+        bspecs = batch_specs(cfg, shape, policy, specs["batch"])
+
+        def loss_with_policy(params, batch):
+            return fns.loss(params, batch, policy=policy)
+
+        step = make_train_step(loss_with_policy, opt_cfg, policy=policy)
+        args = (astate, specs["batch"])
+        shardings = (_ns_tree(mesh, ospecs), _ns_tree(mesh, bspecs))
+        return Cell(cfg, shape, mesh, policy, step, args, shardings, None)
+
+    if shape.kind == "prefill":
+        acache = jax.eval_shape(
+            lambda: fns.init_cache(shape.global_batch, shape.seq_len))
+        cspecs = cache_specs_tree(cfg, policy, acache)
+        bspecs = batch_specs(cfg, shape, policy, specs["batch"])
+        placement = model_api.placement_spec(cfg)
+        src = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+
+        def prefill_fn(params, batch, cache, placement_arr, source_ids):
+            return fns.prefill(params, batch, cache, placement=placement_arr,
+                               source_ids=source_ids, n_sources=n_src,
+                               policy=policy, collect_stats=cfg.moe.enabled)
+
+        if placement is None:
+            placement = jax.ShapeDtypeStruct((0, 0), jnp.int32)
+        args = (aparams, specs["batch"], acache, placement, src)
+        shardings = (_ns_tree(mesh, pspecs), _ns_tree(mesh, bspecs),
+                     _ns_tree(mesh, cspecs), NamedSharding(mesh, P()),
+                     NamedSharding(mesh, batch_specs(
+                         cfg, shape, policy, src)))
+        return Cell(cfg, shape, mesh, policy, prefill_fn, args, shardings,
+                    None)
+
+    # decode
+    n_chips = prod(mesh.shape[a] for a in mesh.axis_names)
+    acache16 = jax.eval_shape(
+        lambda: fns.init_cache(shape.global_batch, shape.seq_len))
+    cache_bytes = sum(l.size * l.dtype.itemsize
+                      for l in jax.tree.leaves(acache16))
+    kv_dtype = "int8" if cache_bytes / n_chips > 8e9 else "bfloat16"
+    acache = jax.eval_shape(
+        lambda: fns.init_cache(shape.global_batch, shape.seq_len,
+                               kv_dtype=kv_dtype))
+    cspecs = cache_specs_tree(cfg, policy, acache)
+    toks = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+    lens = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+    placement = model_api.placement_spec(cfg)
+    src = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+
+    def decode_fn(params, tokens, cache, lengths, placement_arr, source_ids):
+        return fns.decode(params, tokens, cache, lengths,
+                          placement=placement_arr, source_ids=source_ids,
+                          n_sources=n_src, policy=policy,
+                          collect_stats=cfg.moe.enabled)
+
+    if placement is None:
+        placement = jax.ShapeDtypeStruct((0, 0), jnp.int32)
+    tspec = NamedSharding(mesh, batch_specs(cfg, shape, policy, toks))
+    args = (aparams, toks, acache, lens, placement, src)
+    shardings = (_ns_tree(mesh, pspecs), tspec, _ns_tree(mesh, cspecs),
+                 tspec, NamedSharding(mesh, P()), tspec)
+    return Cell(cfg, shape, mesh, policy, decode_fn, args, shardings, None)
+
+
+def lower_cell(cell: Cell, donate_cache: bool = True):
+    """donate_cache: KV caches are donated on serving cells so the per-step
+    cache update aliases in place instead of copying hundreds of GB
+    [§Perf iteration B1]."""
+    donate = ()
+    if donate_cache and cell.shape.kind in ("prefill", "decode"):
+        donate = (2,)   # cache is arg 2 in both signatures
+    with cell.mesh:
+        jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                         donate_argnums=donate)
+        return jitted.lower(*cell.args)

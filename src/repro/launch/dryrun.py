@@ -1,0 +1,138 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import (device count locks at
+# first init). REPRO_DRYRUN_DEVICES overrides for fast local iteration.
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_DRYRUN_DEVICES"])
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: sharding
+mismatches, compile-time OOM, or unsupported collectives fail here. Records
+memory_analysis / cost_analysis / collective bytes per cell into
+experiments/dryrun/*.json for EXPERIMENTS.md §Dry-run and §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-moe-30b-a3b \
+      --shape decode_32k [--multi-pod]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import SHAPES, get_config, list_archs
+from repro.launch.cells import build_cell, cell_is_skipped, lower_cell
+from repro.launch.mesh import make_debug_mesh, make_production_mesh
+from repro.launch.hlo_analysis import collective_bytes_from_text
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, debug_mesh: bool,
+             outdir: str):
+    mesh_name = ("debug_" if debug_mesh else "") + (
+        "pod2x16x16" if multi_pod else "pod16x16")
+    tag = f"{arch}__{shape_name}__{mesh_name}"
+    cfg = get_config(arch)
+    from repro.configs import get_shape
+    shape = get_shape(shape_name)
+    skip = cell_is_skipped(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "family": cfg.family, "params": cfg.param_count(),
+           "active_params": cfg.active_param_count()}
+    if skip:
+        rec["status"] = "SKIP"
+        rec["skip_reason"] = skip
+        print(f"[dryrun] {tag}: SKIP ({skip})")
+        return rec
+
+    mesh = (make_debug_mesh(multi_pod=multi_pod) if debug_mesh
+            else make_production_mesh(multi_pod=multi_pod))
+    t0 = time.time()
+    cell = build_cell(arch, shape_name, mesh)
+    lowered = lower_cell(cell)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    print(f"[dryrun] {tag}: lower {t1-t0:.1f}s compile {t2-t1:.1f}s")
+    print(compiled.memory_analysis())
+    print({k: v for k, v in cost.items()
+           if k in ("flops", "bytes accessed", "utilization")} if cost
+          else cost)
+
+    hlo = compiled.as_text()
+    coll = collective_bytes_from_text(hlo)
+    rec.update({
+        "status": "OK",
+        "lower_s": t1 - t0,
+        "compile_s": t2 - t1,
+        "flops": cost.get("flops", 0.0) if cost else 0.0,
+        "bytes_accessed": cost.get("bytes accessed", 0.0) if cost else 0.0,
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "generated_code_bytes": getattr(
+                mem, "generated_code_size_in_bytes", 0),
+        },
+        "collectives": coll,
+    })
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list_archs())
+    ap.add_argument("--shape", choices=[s.name for s in SHAPES])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--debug-mesh", action="store_true",
+                    help="tiny mesh for local iteration")
+    ap.add_argument("--outdir", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.outdir, exist_ok=True)
+    cells = []
+    if args.all:
+        for arch in list_archs():
+            for s in SHAPES:
+                cells.append((arch, s.name))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape)]
+
+    failures = []
+    for arch, shape_name in cells:
+        try:
+            rec = run_cell(arch, shape_name, args.multi_pod, args.debug_mesh,
+                           args.outdir)
+        except Exception as e:
+            traceback.print_exc()
+            rec = {"arch": arch, "shape": shape_name, "status": "FAIL",
+                   "error": f"{type(e).__name__}: {e}"}
+            failures.append((arch, shape_name, str(e)))
+        mesh_name = ("debug_" if args.debug_mesh else "") + (
+            "pod2x16x16" if args.multi_pod else "pod16x16")
+        path = os.path.join(args.outdir,
+                            f"{arch}__{shape_name}__{mesh_name}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=2)
+
+    if failures:
+        print(f"\n[dryrun] {len(failures)} FAILURES:")
+        for a, s, e in failures:
+            print(f"  {a} x {s}: {e[:200]}")
+        sys.exit(1)
+    print("\n[dryrun] all cells OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""HLO text analysis: collective byte accounting for the roofline.
+
+``compiled.cost_analysis()`` has no collective term, so we parse the compiled
+HLO and sum operand bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute. Ops inside ``while`` bodies (layer scans)
+execute trip-count times but appear once in text; the roofline module handles
+that by lowering per-layer bodies separately (see launch/roofline.py) — this
+function additionally reports per-op counts so both paths can be compared.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Sum bytes over all shapes in a type string (handles tuples)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_text(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per-collective-kind {count, bytes} from compiled HLO text.
+
+    Bytes = output shape bytes of each collective instruction (the data that
+    crosses links, up to the algorithm factor applied by the roofline).
+    """
+    out = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # "%name = bf16[...] all-gather(...)" / fusion lines excluded
+        m = re.match(r"%?[\w.\-]+ = ((?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\])\S*)\s+"
+                     r"([a-z\-]+)", s)
+        if not m:
+            continue
+        typ, op = m.group(1), m.group(2)
+        for c in _COLLECTIVES:
+            if op == c or op == c + "-start" or op == c + "-done":
+                if op.endswith("-done"):
+                    break  # counted at -start
+                out[c]["count"] += 1
+                out[c]["bytes"] += _shape_bytes(typ)
+                break
+    return out
+
+
+def total_collective_bytes(coll: Dict[str, Dict[str, float]]) -> int:
+    return int(sum(v["bytes"] for v in coll.values()))

@@ -1,0 +1,110 @@
+import os
+os.environ.setdefault(
+    "XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_DRYRUN_DEVICES"])
+
+"""Perf hillclimbing driver (EXPERIMENTS.md §Perf).
+
+Three chosen cells, each with a sequence of hypothesis-driven variants.
+Variant v0 is the paper-faithful baseline implementation; later variants
+apply one change at a time so the delta is attributable. Each variant
+re-lowers + re-analyzes the roofline terms; JSON records go to
+experiments/perf/.
+"""
+import argparse
+import json
+
+import repro.models.moe as moe_mod
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import roofline_cell
+
+CELLS = {
+    # (arch, shape): list of (variant_name, moe PERF dict, overrides, donate)
+    ("qwen3-moe-30b-a3b", "prefill_32k"): [
+        ("v0_baseline",
+         {"decode_regroup": False, "dispatch_constraints": False,
+          "vmap_scatter": False}, None, False),
+        ("v1_dispatch_constraints",
+         {"decode_regroup": False, "dispatch_constraints": True,
+          "vmap_scatter": False}, None, False),
+        ("v2_vmap_scatter",
+         {"decode_regroup": False, "dispatch_constraints": True,
+          "vmap_scatter": True}, None, False),
+        ("v3_plus_cache_donation",
+         {"decode_regroup": False, "dispatch_constraints": True,
+          "vmap_scatter": True}, None, True),
+    ],
+    ("qwen3-moe-30b-a3b", "decode_32k"): [
+        ("v0_baseline",
+         {"decode_regroup": False, "dispatch_constraints": False,
+          "vmap_scatter": False}, None, False),
+        ("v1_single_group_dispatch",
+         {"decode_regroup": True, "dispatch_constraints": False,
+          "vmap_scatter": False}, None, False),
+        ("v2_vmap_scatter",
+         {"decode_regroup": True, "dispatch_constraints": True,
+          "vmap_scatter": True}, None, False),
+        ("v3_plus_cache_donation",
+         {"decode_regroup": True, "dispatch_constraints": True,
+          "vmap_scatter": True}, None, True),
+    ],
+    ("llama4-maverick-400b-a17b", "train_4k"): [
+        ("v0_baseline_rowparallel",
+         {"decode_regroup": True, "dispatch_constraints": True,
+          "vmap_scatter": False}, {"expert_rowparallel": True}, False),
+        ("v1_weight_gather",
+         {"decode_regroup": True, "dispatch_constraints": True,
+          "vmap_scatter": False}, {"expert_rowparallel": False}, False),
+        ("v2_vmap_scatter",
+         {"decode_regroup": True, "dispatch_constraints": True,
+          "vmap_scatter": True}, {"expert_rowparallel": False}, False),
+    ],
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="experiments/perf")
+    ap.add_argument("--cell", default=None,
+                    help="arch:shape to run a single cell")
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+    mesh = make_production_mesh()
+
+    for (arch, shape), variants in CELLS.items():
+        if args.cell and args.cell != f"{arch}:{shape}":
+            continue
+        print(f"\n=== {arch} x {shape} ===")
+        prev = None
+        for name, perf, overrides, donate in variants:
+            moe_mod.PERF.update(perf)
+            terms = roofline_cell(arch, shape, mesh, "pod16x16",
+                                  policy_overrides=overrides,
+                                  donate_cache=donate)
+            d = terms.to_dict()
+            d["variant"] = name
+            dom = d["bottleneck"]
+            line = (f"{name:28s} compute={d['compute_s']:.3e}s "
+                    f"memory={d['memory_s']:.3e}s "
+                    f"collective={d['collective_s']:.3e}s "
+                    f"[{dom}] frac={d['roofline_fraction']:.4f} "
+                    f"useful={d['useful_flops_ratio']:.3f}")
+            if prev is not None:
+                dd = d[f"{prev['bottleneck']}_s"] / \
+                    max(prev[f"{prev['bottleneck']}_s"], 1e-30) - 1
+                line += f"  (dominant-term {dd:+.1%} vs prev)"
+            print(line)
+            with open(os.path.join(
+                    args.outdir, f"{arch}__{shape}__{name}.json"), "w") as f:
+                json.dump(d, f, indent=2)
+            prev = d
+        # restore optimized defaults
+        moe_mod.PERF.update({"decode_regroup": True,
+                             "dispatch_constraints": True,
+                             "vmap_scatter": True})
+
+
+if __name__ == "__main__":
+    main()

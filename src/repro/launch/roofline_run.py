@@ -1,0 +1,57 @@
+import os
+os.environ.setdefault(
+    "XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_DRYRUN_DEVICES"])
+
+"""Roofline sweep driver: all (arch x shape) cells on the single-pod mesh.
+
+Writes experiments/roofline/<arch>__<shape>.json; the §Roofline table in
+EXPERIMENTS.md is generated from these via benchmarks/roofline_table.py.
+"""
+import argparse
+import json
+import traceback
+
+from repro.configs import SHAPES, list_archs
+from repro.launch.mesh import make_debug_mesh, make_production_mesh
+from repro.launch.roofline import roofline_cell
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--debug-mesh", action="store_true")
+    ap.add_argument("--outdir", default="experiments/roofline")
+    args = ap.parse_args()
+
+    os.makedirs(args.outdir, exist_ok=True)
+    mesh = make_debug_mesh() if args.debug_mesh else make_production_mesh()
+    mesh_name = ("debug_" if args.debug_mesh else "") + "pod16x16"
+
+    archs = [args.arch] if args.arch else list_archs()
+    shapes = [args.shape] if args.shape else [s.name for s in SHAPES]
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            try:
+                terms = roofline_cell(arch, shape, mesh, mesh_name)
+                d = terms.to_dict()
+                status = d["skip"] or (
+                    f"{d['bottleneck']}-bound "
+                    f"frac={d['roofline_fraction']:.3f}")
+                print(f"[roofline] {arch} x {shape}: {status}")
+            except Exception as e:
+                traceback.print_exc()
+                d = {"arch": arch, "shape": shape, "error": str(e)}
+                failures += 1
+            with open(os.path.join(args.outdir,
+                                   f"{arch}__{shape}.json"), "w") as f:
+                json.dump(d, f, indent=2)
+    print(f"[roofline] done ({failures} failures)")
+
+
+if __name__ == "__main__":
+    main()

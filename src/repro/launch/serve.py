@@ -1,0 +1,52 @@
+"""Serving launcher: simulated cluster (paper-scale sweeps) or real tiny
+data plane.
+
+  PYTHONPATH=src python -m repro.launch.serve --system gimbal --dist random \
+      --rps 4 --requests 200
+  PYTHONPATH=src python -m repro.launch.serve --real   # tiny real model
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--system", default="gimbal",
+                    help="vllm|moetuner|semmoe|gimbal|gimbal_dp|gimbal_ep|"
+                         "gimbal_nocollab|gimbal_uncalibrated")
+    ap.add_argument("--dist", default="random")
+    ap.add_argument("--rps", type=float, default=4.0)
+    ap.add_argument("--requests", type=int, default=200)
+    ap.add_argument("--seed", type=int, default=1)
+    ap.add_argument("--mean-output", type=int, default=250)
+    ap.add_argument("--real", action="store_true",
+                    help="serve a real tiny MoE model end to end")
+    args = ap.parse_args()
+
+    if args.real:
+        import os
+        import sys
+        root = os.path.dirname(os.path.dirname(os.path.dirname(
+            os.path.dirname(os.path.abspath(__file__)))))
+        sys.path.insert(0, root)   # examples/ lives at the repo root
+        from examples.serve_moe import main as real_main
+        real_main()
+        return
+
+    from repro.serving import PAPER_SYSTEMS, simulate
+    from repro.workloads import generate_trace
+    trace = generate_trace(args.dist, args.requests, rps=args.rps,
+                           seed=args.seed, mean_output=args.mean_output)
+    res = simulate(trace, PAPER_SYSTEMS[args.system], traffic_seed=args.seed)
+    print(json.dumps({
+        "system": args.system, "dist": args.dist, "rps": args.rps,
+        "ttft_s": res.mean_ttft, "p99_ttft_s": res.p99_ttft,
+        "tpot_ms": res.mean_tpot * 1e3, "e2e_s": res.mean_e2e,
+        "throughput_rps": res.throughput, "signals": res.signals,
+    }, indent=2, default=str))
+
+
+if __name__ == "__main__":
+    main()

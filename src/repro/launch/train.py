@@ -1,0 +1,77 @@
+"""Training launcher (smoke-scale on CPU; production mesh via --dryrun).
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-moe-30b-a3b \
+      --steps 50 --checkpoint /tmp/ck
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-moe-30b-a3b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--grad-compression", choices=["none", "int8"],
+                    default="none")
+    ap.add_argument("--moment-dtype", default="bfloat16")
+    ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=25)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_smoke_config
+    from repro.ft import (checkpoint_step, restore_checkpoint,
+                          save_checkpoint)
+    from repro.models import build_model
+    from repro.train import AdamWConfig, make_train_state, make_train_step
+
+    cfg = get_smoke_config(args.arch)
+    fns = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = fns.init(key)
+    ocfg = AdamWConfig(lr=args.lr, moment_dtype=args.moment_dtype)
+    state = make_train_state(params, ocfg)
+    start = 0
+    if args.resume and args.checkpoint and \
+            checkpoint_step(args.checkpoint) is not None:
+        start = checkpoint_step(args.checkpoint)
+        state = restore_checkpoint(args.checkpoint, state)
+        print(f"resumed from step {start}")
+
+    step_fn = jax.jit(make_train_step(
+        lambda p, b: fns.loss(p, b), ocfg,
+        grad_compression=None if args.grad_compression == "none"
+        else args.grad_compression))
+
+    for i in range(start, args.steps):
+        k = jax.random.fold_in(key, i)
+        toks = jax.random.randint(k, (args.batch, args.seq + 1), 0,
+                                  cfg.vocab_size)
+        if cfg.input_mode == "embeddings" or cfg.family == "encdec":
+            batch = {"embeddings": jax.random.normal(
+                k, (args.batch, args.seq, cfg.d_model), jnp.bfloat16),
+                "tokens": toks[:, :-1], "labels": toks[:, 1:]}
+            if cfg.input_mode == "embeddings" and cfg.family != "encdec":
+                batch.pop("tokens")
+        else:
+            batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+        t0 = time.time()
+        state, metrics = step_fn(state, batch)
+        loss = float(metrics["loss"])
+        if i % 10 == 0 or i == args.steps - 1:
+            print(f"step {i:4d} loss={loss:.4f} "
+                  f"({(time.time() - t0) * 1e3:.0f} ms)")
+        if args.checkpoint and (i + 1) % args.checkpoint_every == 0:
+            save_checkpoint(args.checkpoint, state, step=i + 1)
+            print(f"checkpointed at step {i + 1}")
+
+
+if __name__ == "__main__":
+    main()

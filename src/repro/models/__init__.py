@@ -1,0 +1,5 @@
+from repro.models.api import (ModelFns, build_model, cache_specs, input_specs,
+                              param_specs_abstract, placement_spec)
+
+__all__ = ["ModelFns", "build_model", "cache_specs", "input_specs",
+           "param_specs_abstract", "placement_spec"]

@@ -1,0 +1,141 @@
+"""Unified model API: family dispatch + input specs for every (arch, shape).
+
+``build_model(cfg)`` returns a ``ModelFns`` bundle whose five functions have
+identical signatures across families, so the serving engine, trainer, and
+dry-run never branch on architecture.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+class ModelFns(NamedTuple):
+    cfg: ModelConfig
+    init: Callable[..., Any]
+    loss: Callable[..., Any]           # (params, batch, **kw) -> (loss, metrics)
+    prefill: Callable[..., Any]        # (params, batch, cache, **kw)
+    decode: Callable[..., Any]         # (params, tokens, cache, lengths, **kw)
+    init_cache: Callable[..., Any]     # (batch, max_len) -> cache pytree
+
+
+def build_model(cfg: ModelConfig) -> ModelFns:
+    if cfg.family in ("dense", "moe", "vlm", "hybrid"):
+        from repro.models import transformer as m
+        return ModelFns(
+            cfg=cfg,
+            init=lambda key: m.init_params(key, cfg),
+            loss=lambda params, batch, **kw: m.loss_fn(params, cfg, batch, **kw),
+            prefill=lambda params, batch, cache, **kw: m.prefill(
+                params, cfg, batch, cache, **kw),
+            decode=lambda params, tokens, cache, lengths, **kw: m.decode_step(
+                params, cfg, tokens, cache, lengths, **kw),
+            init_cache=lambda batch, max_len, **kw: m.init_cache(
+                cfg, batch, max_len, **kw),
+        )
+    if cfg.family == "ssm":
+        from repro.models import xlstm as m
+        return ModelFns(
+            cfg=cfg,
+            init=lambda key: m.init_params(key, cfg),
+            loss=lambda params, batch, **kw: m.loss_fn(params, cfg, batch, **kw),
+            prefill=lambda params, batch, cache, **kw: m.prefill(
+                params, cfg, batch, cache, **kw),
+            decode=lambda params, tokens, cache, lengths, **kw: m.decode_step(
+                params, cfg, tokens, cache, lengths, **kw),
+            init_cache=lambda batch, max_len, **kw: m.init_cache(
+                cfg, batch, max_len, **kw),
+        )
+    if cfg.family == "encdec":
+        from repro.models import encdec as m
+        return ModelFns(
+            cfg=cfg,
+            init=lambda key: m.init_params(key, cfg),
+            loss=lambda params, batch, **kw: m.loss_fn(params, cfg, batch, **kw),
+            prefill=lambda params, batch, cache, **kw: m.prefill(
+                params, cfg, batch, cache, **kw),
+            decode=lambda params, tokens, cache, lengths, **kw: m.decode_step(
+                params, cfg, tokens, cache, lengths, **kw),
+            init_cache=lambda batch, max_len, **kw: m.init_cache(
+                cfg, batch, max_len, **kw),
+        )
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+# ------------------------------------------------------------------ specs
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of one cell.
+
+    train  -> {"batch": {tokens|embeddings, labels}}
+    prefill-> {"batch": {tokens|embeddings(+tokens for encdec), lengths}}
+    decode -> {"tokens", "lengths"} (cache specs come from cache_specs()).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        if cfg.family == "encdec":
+            batch = {
+                "embeddings": _sds((B, S, cfg.d_model), cfg.dtype),
+                "tokens": _sds((B, S), jnp.int32),
+                "labels": _sds((B, S), jnp.int32),
+            }
+        elif cfg.input_mode == "embeddings":
+            batch = {
+                "embeddings": _sds((B, S, cfg.d_model), cfg.dtype),
+                "labels": _sds((B, S), jnp.int32),
+            }
+        else:
+            batch = {
+                "tokens": _sds((B, S), jnp.int32),
+                "labels": _sds((B, S), jnp.int32),
+            }
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        if cfg.family == "encdec":
+            batch = {
+                "embeddings": _sds((B, S, cfg.d_model), cfg.dtype),
+                "tokens": _sds((B, S), jnp.int32),
+                "lengths": _sds((B,), jnp.int32),
+            }
+        elif cfg.input_mode == "embeddings":
+            batch = {
+                "embeddings": _sds((B, S, cfg.d_model), cfg.dtype),
+                "lengths": _sds((B,), jnp.int32),
+            }
+        else:
+            batch = {
+                "tokens": _sds((B, S), jnp.int32),
+                "lengths": _sds((B,), jnp.int32),
+            }
+        return {"batch": batch}
+    # decode: one new token against a seq_len-deep cache
+    return {
+        "tokens": _sds((B,), jnp.int32),
+        "lengths": _sds((B,), jnp.int32),
+    }
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """Abstract cache pytree for decode cells (no allocation)."""
+    fns = build_model(cfg)
+    return jax.eval_shape(
+        lambda: fns.init_cache(shape.global_batch, shape.seq_len))
+
+
+def param_specs_abstract(cfg: ModelConfig):
+    fns = build_model(cfg)
+    return jax.eval_shape(lambda: fns.init(jax.random.PRNGKey(0)))
+
+
+def placement_spec(cfg: ModelConfig):
+    if not cfg.moe.enabled:
+        return None
+    return _sds((cfg.n_moe_layers, cfg.moe.n_experts), jnp.int32)

@@ -1,0 +1,246 @@
+"""Encoder-decoder transformer (seamless-m4t backbone).
+
+Encoder consumes precomputed frame embeddings (speech frontend is a stub per
+the assignment); decoder consumes text tokens with causal self-attention +
+cross-attention over the cached encoder output. Both stacks scan over layers.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.attention import flash_attention, ring_positions
+from repro.models.layers import (cross_entropy, dense_init, embed_tokens,
+                                 init_embed, init_mlp, lm_logits, mlp,
+                                 rms_norm)
+from repro.models.transformer import _qkv, init_attention
+
+
+def init_cross_attention(key, cfg: ModelConfig):
+    return init_attention(key, cfg)
+
+
+def _init_enc_layer(key, cfg):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln_attn": jnp.zeros((cfg.d_model,), jnp.float32),
+        "attn": init_attention(ks[0], cfg),
+        "ln_ffn": jnp.zeros((cfg.d_model,), jnp.float32),
+        "mlp": init_mlp(ks[1], cfg.d_model, cfg.d_ff, jnp.dtype(cfg.dtype)),
+    }
+
+
+def _init_dec_layer(key, cfg):
+    ks = jax.random.split(key, 3)
+    return {
+        "ln_attn": jnp.zeros((cfg.d_model,), jnp.float32),
+        "attn": init_attention(ks[0], cfg),
+        "ln_cross": jnp.zeros((cfg.d_model,), jnp.float32),
+        "cross": init_cross_attention(ks[1], cfg),
+        "ln_ffn": jnp.zeros((cfg.d_model,), jnp.float32),
+        "mlp": init_mlp(ks[2], cfg.d_model, cfg.d_ff, jnp.dtype(cfg.dtype)),
+    }
+
+
+def init_params(key, cfg: ModelConfig):
+    k_embed, k_enc, k_dec, k_in = jax.random.split(key, 4)
+    enc_keys = jax.random.split(k_enc, cfg.enc_layers)
+    dec_keys = jax.random.split(k_dec, cfg.dec_layers)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "embed": init_embed(k_embed, cfg),
+        "enc_in": dense_init(k_in, (cfg.d_model, cfg.d_model), 0, dt),
+        "enc": jax.vmap(lambda k: _init_enc_layer(k, cfg))(enc_keys),
+        "dec": jax.vmap(lambda k: _init_dec_layer(k, cfg))(dec_keys),
+        "enc_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+
+
+def encode(params, cfg: ModelConfig, embeddings, policy=None):
+    """embeddings: (B, S_src, D) stub frame features -> encoder states."""
+    x = jnp.einsum("bsd,de->bse", embeddings.astype(jnp.dtype(cfg.dtype)),
+                   params["enc_in"])
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    if policy is not None:
+        x = policy.shard_resid(x)
+
+    def body(x, lp):
+        xn = rms_norm(x, lp["ln_attn"], cfg.norm_eps)
+        q, k, v = _qkv(lp["attn"], cfg, xn, positions)
+        out = flash_attention(q, k, v, q_pos=positions, k_pos=positions,
+                              causal=False)
+        out = out.reshape(B, S, cfg.q_dim)
+        x = x + jnp.einsum("bsf,fd->bsd", out, lp["attn"]["wo"])
+        xn = rms_norm(x, lp["ln_ffn"], cfg.norm_eps)
+        x = x + mlp(lp["mlp"], xn, policy)
+        if policy is not None:
+            x = policy.shard_resid(x)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["enc"])
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               kv_dtype: str = "bfloat16"):
+    del kv_dtype  # enc-dec caches stay bf16 (decoder cache is small)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "k": jnp.zeros((cfg.dec_layers, batch, max_len, cfg.n_kv_heads,
+                        cfg.head_dim), dt),
+        "v": jnp.zeros((cfg.dec_layers, batch, max_len, cfg.n_kv_heads,
+                        cfg.head_dim), dt),
+        # cross K/V computed once from encoder output at prefill:
+        "xk": jnp.zeros((cfg.dec_layers, batch, max_len, cfg.n_kv_heads,
+                         cfg.head_dim), dt),
+        "xv": jnp.zeros((cfg.dec_layers, batch, max_len, cfg.n_kv_heads,
+                         cfg.head_dim), dt),
+    }
+
+
+def _dec_stack(params, cfg, x, positions, cache, enc_out, enc_positions,
+               mode, policy):
+    B, S, _ = x.shape
+
+    def body(x, xs):
+        lp, c = xs
+        # self attention
+        xn = rms_norm(x, lp["ln_attn"], cfg.norm_eps)
+        q, k, v = _qkv(lp["attn"], cfg, xn, positions)
+        if mode == "train":
+            out = flash_attention(q, k, v, q_pos=positions, k_pos=positions,
+                                  causal=True)
+            nc = c
+        elif mode == "prefill":
+            out = flash_attention(q, k, v, q_pos=positions, k_pos=positions,
+                                  causal=True)
+            ck = jax.lax.dynamic_update_slice_in_dim(c["k"], k, 0, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(c["v"], v, 0, axis=1)
+            if policy is not None:
+                ck, cv = policy.shard_kv_cache(ck), policy.shard_kv_cache(cv)
+            nc = dict(c, k=ck, v=cv)
+        else:  # decode
+            L = c["k"].shape[1]
+            pos = positions[:, 0]
+            bidx = jnp.arange(B)
+            ck = c["k"].at[bidx, pos % L].set(k[:, 0])
+            cv = c["v"].at[bidx, pos % L].set(v[:, 0])
+            k_pos = ring_positions(pos, L)
+            out = flash_attention(q, ck, cv, q_pos=positions, k_pos=k_pos,
+                                  causal=True)
+            nc = dict(c, k=ck, v=cv)
+        x = x + jnp.einsum("bsf,fd->bsd", out.reshape(B, S, cfg.q_dim),
+                           lp["attn"]["wo"])
+
+        # cross attention
+        xn = rms_norm(x, lp["ln_cross"], cfg.norm_eps)
+        qx = jnp.einsum("bsd,df->bsf", xn, lp["cross"]["wq"]).reshape(
+            B, S, cfg.n_heads, cfg.head_dim)
+        if mode == "decode":
+            xk, xv = c["xk"], c["xv"]
+            kp = enc_positions
+        else:
+            xk = jnp.einsum("bsd,df->bsf", enc_out, lp["cross"]["wk"]).reshape(
+                B, -1, cfg.n_kv_heads, cfg.head_dim)
+            xv = jnp.einsum("bsd,df->bsf", enc_out, lp["cross"]["wv"]).reshape(
+                B, -1, cfg.n_kv_heads, cfg.head_dim)
+            kp = enc_positions
+            if mode == "prefill":
+                nxk = jax.lax.dynamic_update_slice_in_dim(
+                    c["xk"], xk, 0, axis=1)
+                nxv = jax.lax.dynamic_update_slice_in_dim(
+                    c["xv"], xv, 0, axis=1)
+                if policy is not None:
+                    nxk = policy.shard_kv_cache(nxk)
+                    nxv = policy.shard_kv_cache(nxv)
+                nc = dict(nc, xk=nxk, xv=nxv)
+        outx = flash_attention(qx, xk, xv, q_pos=positions, k_pos=kp,
+                               causal=False)
+        x = x + jnp.einsum("bsf,fd->bsd", outx.reshape(B, S, cfg.q_dim),
+                           lp["cross"]["wo"])
+
+        xn = rms_norm(x, lp["ln_ffn"], cfg.norm_eps)
+        x = x + mlp(lp["mlp"], xn, policy)
+        if policy is not None:
+            x = policy.shard_resid(x)
+        return x, nc
+
+    if mode == "train":
+        body_fn = jax.checkpoint(body, prevent_cse=False)
+        x, _ = jax.lax.scan(body_fn, x, (params["dec"], cache))
+        return x, cache
+    x, new_cache = jax.lax.scan(body, x, (params["dec"], cache))
+    return x, new_cache
+
+
+def loss_fn(params, cfg: ModelConfig, batch, *, placement=None, policy=None,
+            aux_weight: float = 0.0):
+    """batch: {embeddings (B,S_src,D), tokens (B,S_tgt), labels (B,S_tgt)}."""
+    enc_out = encode(params, cfg, batch["embeddings"], policy)
+    B, S_src = enc_out.shape[:2]
+    x = embed_tokens(params["embed"], cfg, batch["tokens"])
+    S = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    enc_positions = jnp.broadcast_to(
+        jnp.arange(S_src, dtype=jnp.int32)[None], (B, S_src))
+    dummy_cache = {
+        "k": jnp.zeros((cfg.dec_layers, B, 1, cfg.n_kv_heads, cfg.head_dim),
+                       x.dtype),
+        "v": jnp.zeros((cfg.dec_layers, B, 1, cfg.n_kv_heads, cfg.head_dim),
+                       x.dtype),
+        "xk": jnp.zeros((cfg.dec_layers, B, 1, cfg.n_kv_heads, cfg.head_dim),
+                        x.dtype),
+        "xv": jnp.zeros((cfg.dec_layers, B, 1, cfg.n_kv_heads, cfg.head_dim),
+                        x.dtype),
+    }
+    x, _ = _dec_stack(params, cfg, x, positions, dummy_cache, enc_out,
+                      enc_positions, "train", policy)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = lm_logits(params["embed"], cfg, x)
+    ce = cross_entropy(logits, batch["labels"], batch.get("mask"))
+    return ce, {"ce": ce, "aux": jnp.asarray(0.0, jnp.float32)}
+
+
+def prefill(params, cfg: ModelConfig, batch, cache, *, placement=None,
+            source_ids=None, n_sources: int = 0, policy=None,
+            collect_stats: bool = True):
+    """batch: {embeddings (B,S_src,D), tokens (B,S_tgt), lengths (B,)}."""
+    enc_out = encode(params, cfg, batch["embeddings"], policy)
+    B, S_src = enc_out.shape[:2]
+    x = embed_tokens(params["embed"], cfg, batch["tokens"])
+    S = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    enc_positions = jnp.broadcast_to(
+        jnp.arange(S_src, dtype=jnp.int32)[None], (B, S_src))
+    x, cache = _dec_stack(params, cfg, x, positions, cache, enc_out,
+                          enc_positions, "prefill", policy)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    lengths = batch.get("lengths")
+    last = x[:, -1] if lengths is None else \
+        x[jnp.arange(B), jnp.clip(lengths - 1, 0, S - 1)]
+    logits = lm_logits(params["embed"], cfg, last)
+    return logits, cache, None
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache, lengths, *,
+                placement=None, source_ids=None, n_sources: int = 0,
+                policy=None, collect_stats: bool = True, enc_lengths=None):
+    x = embed_tokens(params["embed"], cfg, tokens[:, None])
+    B = x.shape[0]
+    positions = lengths[:, None].astype(jnp.int32)
+    S_src = cache["xk"].shape[2]
+    enc_positions = jnp.broadcast_to(
+        jnp.arange(S_src, dtype=jnp.int32)[None], (B, S_src))
+    if enc_lengths is not None:  # mask never-written cross-KV slots
+        enc_positions = jnp.where(
+            enc_positions < enc_lengths[:, None], enc_positions, -1)
+    x, cache = _dec_stack(params, cfg, x, positions, cache, None,
+                          enc_positions, "decode", policy)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = lm_logits(params["embed"], cfg, x[:, 0])
+    return logits, cache, None

@@ -1,0 +1,349 @@
+"""Recurrent sequence-mixing layers: mLSTM / sLSTM (xLSTM) and Mamba.
+
+All three expose a *chunkwise* form (outer ``lax.scan`` over chunks carrying
+recurrent state) so prefill at 32k/500k lowers with bounded memory, plus an
+O(1)-state ``*_step`` for decode. The mLSTM intra-chunk computation uses the
+stabilized parallel (matmul) form — the MXU-friendly TPU formulation — and is
+unit-tested against the sequential recurrence oracle in tests/.
+
+Shapes: x (B, S, D); heads H with inner head dim hd.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import dense_init, rms_norm
+
+LOG_EPS = -1e30
+
+
+# =====================================================================
+# mLSTM (matrix-memory LSTM, xLSTM §mLSTM) — chunkwise stabilized form
+# =====================================================================
+def init_mlstm(key, d_model: int, n_heads: int, dtype=jnp.bfloat16):
+    d_in = 2 * d_model
+    ks = jax.random.split(key, 7)
+    return {
+        "w_u": dense_init(ks[0], (d_model, d_in), 0, dtype),
+        "w_gate": dense_init(ks[1], (d_model, d_in), 0, dtype),
+        "w_q": dense_init(ks[2], (d_in, d_in), 0, dtype),
+        "w_k": dense_init(ks[3], (d_in, d_in), 0, dtype),
+        "w_i": dense_init(ks[4], (d_model, n_heads), 0, jnp.float32),
+        "w_f": dense_init(ks[5], (d_model, n_heads), 0, jnp.float32),
+        "w_o": dense_init(ks[6], (d_in, d_model), 0, dtype),
+        "norm": jnp.zeros((d_in,), jnp.float32),
+    }
+
+
+def mlstm_state_init(batch: int, n_heads: int, hd: int):
+    return {
+        "C": jnp.zeros((batch, n_heads, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, n_heads, hd), jnp.float32),
+        "m": jnp.full((batch, n_heads), LOG_EPS, jnp.float32),
+    }
+
+
+def _mlstm_chunk(q, k, v, log_i, log_f, state):
+    """Stabilized chunkwise-parallel mLSTM on one chunk.
+
+    q,k,v: (B, L, H, hd) fp32; log_i/log_f: (B, L, H); state from
+    mlstm_state_init. Returns (h (B, L, H, hd), new_state).
+    """
+    B, L, H, hd = q.shape
+    scale = 1.0 / np.sqrt(hd)
+    b = jnp.cumsum(log_f, axis=1)                           # (B, L, H)
+    m_in, C_in, n_in = state["m"], state["C"], state["n"]
+
+    # per-position stabilizer: max(b_t + m_in, max_{j<=t}(log_i_j + b_t - b_j))
+    a = log_i - b                                            # (B, L, H)
+    a_run = jax.lax.cummax(a, axis=1)
+    m_t = jnp.maximum(b + m_in[:, None, :], b + a_run)       # (B, L, H)
+
+    # intra-chunk decay matrix D_tj = exp(log_i_j + b_t - b_j - m_t), j <= t
+    d_mat = (log_i[:, None, :, :] - b[:, None, :, :]
+             + b[:, :, None, :] - m_t[:, :, None, :])        # (B, t, j, H)
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    d_mat = jnp.where(tri[None, :, :, None], d_mat, LOG_EPS)
+    d_exp = jnp.exp(d_mat)                                   # (B, t, j, H)
+
+    s = jnp.einsum("bthd,bjhd->btjh", q, k) * scale          # (B, t, j, H)
+    s_w = s * d_exp
+    num_intra = jnp.einsum("btjh,bjhd->bthd", s_w, v)
+    den_intra = jnp.sum(s_w, axis=2)                         # (B, t, H)
+
+    # inter-chunk contribution from entering state
+    w_t = jnp.exp(b + m_in[:, None, :] - m_t)                # (B, L, H)
+    num_inter = jnp.einsum("bthd,bhde->bthe", q, C_in) * w_t[..., None] * scale
+    den_inter = jnp.einsum("bthd,bhd->bth", q, n_in) * w_t * scale
+
+    num = num_intra + num_inter
+    den = den_intra + den_inter
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+
+    # chunk-exit state
+    F = b[:, -1, :]                                          # (B, H)
+    g = log_i + F[:, None, :] - b                            # (B, L, H)
+    m_out = jnp.maximum(m_in + F, jnp.max(g, axis=1))
+    decay0 = jnp.exp(m_in + F - m_out)
+    gw = jnp.exp(g - m_out[:, None, :])                      # (B, L, H)
+    C_out = C_in * decay0[..., None, None] + jnp.einsum(
+        "bjhd,bjhe,bjh->bhde", k, v, gw)
+    n_out = n_in * decay0[..., None] + jnp.einsum("bjhd,bjh->bhd", k, gw)
+    return h, {"C": C_out, "n": n_out, "m": m_out}
+
+
+def mlstm_step(q, k, v, log_i, log_f, state):
+    """One-token recurrence (decode). q,k,v: (B, H, hd); gates (B, H)."""
+    hd = q.shape[-1]
+    scale = 1.0 / np.sqrt(hd)
+    m_in, C_in, n_in = state["m"], state["C"], state["n"]
+    m_new = jnp.maximum(log_f + m_in, log_i)
+    i_s = jnp.exp(log_i - m_new)
+    f_s = jnp.exp(log_f + m_in - m_new)
+    C = C_in * f_s[..., None, None] + i_s[..., None, None] * (
+        k[..., :, None] * v[..., None, :])
+    n = n_in * f_s[..., None] + i_s[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C) * scale
+    den = jnp.einsum("bhd,bhd->bh", q, n) * scale
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    return h, {"C": C, "n": n, "m": m_new}
+
+
+def mlstm_block(params, x, n_heads: int, *, state=None, chunk: int = 128,
+                return_state: bool = False, norm_eps: float = 1e-6):
+    """Full mLSTM block: up-proj -> chunkwise mLSTM -> gated down-proj.
+
+    x: (B, S, D). state: carried recurrent state (or None -> zeros).
+    """
+    B, S, D = x.shape
+    d_in = params["w_u"].shape[1]
+    hd = d_in // n_heads
+    u = jnp.einsum("bsd,de->bse", x, params["w_u"])
+    g = jnp.einsum("bsd,de->bse", x, params["w_gate"])
+    q = jnp.einsum("bse,ef->bsf", u, params["w_q"]).reshape(B, S, n_heads, hd)
+    k = jnp.einsum("bse,ef->bsf", u, params["w_k"]).reshape(B, S, n_heads, hd)
+    v = u.reshape(B, S, n_heads, hd)
+    log_i = jnp.einsum("bsd,dh->bsh", x.astype(jnp.float32), params["w_i"])
+    log_f = jax.nn.log_sigmoid(
+        jnp.einsum("bsd,dh->bsh", x.astype(jnp.float32), params["w_f"]))
+
+    if state is None:
+        state = mlstm_state_init(B, n_heads, hd)
+
+    if S == 1:
+        h, state = mlstm_step(
+            q[:, 0].astype(jnp.float32), k[:, 0].astype(jnp.float32),
+            v[:, 0].astype(jnp.float32), log_i[:, 0], log_f[:, 0], state)
+        h = h[:, None]
+    else:
+        L = min(chunk, S)
+        n_chunks = -(-S // L)
+        pad = n_chunks * L - S
+        qf, kf, vf = (jnp.pad(t.astype(jnp.float32),
+                              ((0, 0), (0, pad), (0, 0), (0, 0)))
+                      for t in (q, k, v))
+        lif = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)))
+        # padded steps must not decay/accumulate: log_f = 0, log_i = -inf
+        lff = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))
+        if pad:
+            mask = jnp.arange(n_chunks * L) < S
+            lif = jnp.where(mask[None, :, None], lif, LOG_EPS)
+            lff = jnp.where(mask[None, :, None], lff, 0.0)
+
+        def chunk_fn(c):
+            return c.reshape((B, n_chunks, L) + c.shape[2:]).transpose(
+                (1, 0, 2) + tuple(range(3, c.ndim + 1)))
+
+        def step(st, xs):
+            qc, kc, vc, lic, lfc = xs
+            h, st = _mlstm_chunk(qc, kc, vc, lic, lfc, st)
+            return st, h
+
+        state, hs = jax.lax.scan(
+            step, state, (chunk_fn(qf), chunk_fn(kf), chunk_fn(vf),
+                          chunk_fn(lif), chunk_fn(lff)))
+        h = hs.transpose(1, 0, 2, 3, 4).reshape(B, n_chunks * L, n_heads, hd)
+        h = h[:, :S]
+
+    h = h.reshape(B, S, d_in)
+    h = rms_norm(h.astype(x.dtype), params["norm"], norm_eps)
+    y = h * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+    y = jnp.einsum("bse,ed->bsd", y, params["w_o"])
+    if return_state:
+        return y, state
+    return y
+
+
+# =====================================================================
+# sLSTM (scalar-memory LSTM with exponential gating + block-diag recurrence)
+# =====================================================================
+def init_slstm(key, d_model: int, n_heads: int, dtype=jnp.bfloat16):
+    hd = d_model // n_heads
+    ks = jax.random.split(key, 4)
+    d_ff = -(-4 * d_model // 3)
+    from repro.models.layers import init_mlp
+    return {
+        "w_in": dense_init(ks[0], (d_model, 4 * d_model), 0, dtype),
+        "r": (jax.random.normal(ks[1], (n_heads, hd, 4 * hd), jnp.float32)
+              / np.sqrt(hd)).astype(jnp.float32),
+        "b": jnp.zeros((4 * d_model,), jnp.float32),
+        "ffn": init_mlp(ks[2], d_model, d_ff, dtype),
+        "ffn_norm": jnp.zeros((d_model,), jnp.float32),
+    }
+
+
+def slstm_state_init(batch: int, n_heads: int, hd: int):
+    z = jnp.zeros((batch, n_heads, hd), jnp.float32)
+    return {"c": z, "n": jnp.zeros_like(z), "h": jnp.zeros_like(z),
+            "m": jnp.full((batch, n_heads), LOG_EPS, jnp.float32)}
+
+
+def _slstm_step(state, wx, r):
+    """wx: (B, 4*D) pre-activation from input; r: (H, hd, 4*hd)."""
+    B = wx.shape[0]
+    H, hd, _ = r.shape
+    rec = jnp.einsum("bhd,hdk->bhk", state["h"], r)          # (B, H, 4*hd)
+    pre = wx.reshape(B, H, 4 * hd) + rec
+    z_p, i_p, f_p, o_p = jnp.split(pre, 4, axis=-1)          # (B, H, hd)
+    z = jnp.tanh(z_p)
+    o = jax.nn.sigmoid(o_p)
+    # exponential gating with per-head stabilizer (head-level max over channels)
+    i_t = jnp.max(i_p, axis=-1)                              # (B, H)
+    f_t = jnp.max(jax.nn.log_sigmoid(f_p), axis=-1)
+    m_new = jnp.maximum(f_t + state["m"], i_t)
+    i_g = jnp.exp(i_p - m_new[..., None])
+    f_g = jnp.exp(jax.nn.log_sigmoid(f_p) + state["m"][..., None]
+                  - m_new[..., None])
+    c = f_g * state["c"] + i_g * z
+    n = f_g * state["n"] + i_g
+    h = o * c / jnp.maximum(n, 1e-6)
+    return {"c": c, "n": n, "h": h, "m": m_new}, h
+
+
+def slstm_block(params, x, n_heads: int, *, state=None,
+                return_state: bool = False, norm_eps: float = 1e-6):
+    """x: (B, S, D) -> (B, S, D); strictly sequential scan over time."""
+    B, S, D = x.shape
+    hd = D // n_heads
+    wx = (jnp.einsum("bsd,dk->bsk", x.astype(jnp.float32),
+                     params["w_in"].astype(jnp.float32)) + params["b"])
+    if state is None:
+        state = slstm_state_init(B, n_heads, hd)
+
+    def step(st, w_t):
+        return _slstm_step(st, w_t, params["r"])
+
+    state, hs = jax.lax.scan(step, state, wx.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2, 3).reshape(B, S, D).astype(x.dtype)
+    from repro.models.layers import mlp
+    h = h + mlp(params["ffn"],
+                rms_norm(h, params["ffn_norm"], norm_eps))
+    if return_state:
+        return h, state
+    return h
+
+
+# =====================================================================
+# Mamba selective SSM (Hymba's parallel mamba heads)
+# =====================================================================
+def init_mamba(key, d_model: int, state_dim: int, conv_width: int,
+               expand: int, dtype=jnp.bfloat16):
+    d_in = expand * d_model
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": dense_init(ks[0], (d_model, 2 * d_in), 0, dtype),
+        "conv": (jax.random.normal(ks[1], (conv_width, d_in), jnp.float32)
+                 / np.sqrt(conv_width)).astype(dtype),
+        "w_bc": dense_init(ks[2], (d_in, 2 * state_dim), 0, dtype),
+        "w_dt": dense_init(ks[3], (d_in, d_in), 0, dtype),
+        "a_log": jnp.log(jnp.tile(jnp.arange(
+            1, state_dim + 1, dtype=jnp.float32), (d_in, 1))),
+        "d_skip": jnp.ones((d_in,), jnp.float32),
+        "out_proj": dense_init(ks[5], (d_in, d_model), 0, dtype),
+    }
+
+
+def mamba_state_init(batch: int, d_in: int, state_dim: int, conv_width: int):
+    return {
+        "h": jnp.zeros((batch, d_in, state_dim), jnp.float32),
+        "conv": jnp.zeros((batch, conv_width - 1, d_in), jnp.float32),
+    }
+
+
+def _mamba_scan_chunk(xc, dt, Bc, Cc, a, d_skip, h0):
+    """Sequential selective scan within a chunk.
+
+    xc: (B, L, d_in) fp32; dt: (B, L, d_in); Bc/Cc: (B, L, N); a: (d_in, N).
+    """
+    def step(h, xs):
+        x_t, dt_t, b_t, c_t = xs
+        da = jnp.exp(dt_t[..., None] * (-jnp.exp(a))[None])  # (B, d_in, N)
+        h = h * da + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    xs = (xc.transpose(1, 0, 2), dt.transpose(1, 0, 2),
+          Bc.transpose(1, 0, 2), Cc.transpose(1, 0, 2))
+    h, ys = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2) + xc * d_skip                  # (B, L, d_in)
+    return y, h
+
+
+def mamba_block(params, x, state_dim: int, conv_width: int, *, state=None,
+                chunk: int = 128, return_state: bool = False):
+    """x: (B, S, D) -> (B, S, D) with optional carried state (decode)."""
+    B, S, D = x.shape
+    d_in = params["out_proj"].shape[0]
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    xs, z = jnp.split(xz, 2, axis=-1)                        # (B, S, d_in)
+
+    if state is None:
+        state = mamba_state_init(B, d_in, state_dim, conv_width)
+
+    # depthwise causal conv along S using carried conv tail
+    conv_in = jnp.concatenate(
+        [state["conv"].astype(xs.dtype), xs], axis=1)        # (B, S+w-1, d_in)
+    idx = jnp.arange(S)[:, None] + jnp.arange(conv_width)[None, :]
+    windows = conv_in[:, idx]                                # (B, S, w, d_in)
+    xconv = jnp.einsum("bswd,wd->bsd", windows, params["conv"])
+    xconv = jax.nn.silu(xconv.astype(jnp.float32))
+    new_conv = (conv_in[:, -(conv_width - 1):].astype(jnp.float32)
+                if conv_width > 1 else state["conv"])
+
+    bc = jnp.einsum("bsd,dn->bsn", xconv.astype(x.dtype), params["w_bc"])
+    Bmat, Cmat = jnp.split(bc.astype(jnp.float32), 2, axis=-1)
+    dt = jax.nn.softplus(jnp.einsum(
+        "bsd,de->bse", xconv.astype(x.dtype), params["w_dt"])
+        .astype(jnp.float32))
+
+    L = min(chunk, S)
+    n_chunks = -(-S // L)
+    pad = n_chunks * L - S
+    if pad:
+        xconv = jnp.pad(xconv, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bmat = jnp.pad(Bmat, ((0, 0), (0, pad), (0, 0)))
+        Cmat = jnp.pad(Cmat, ((0, 0), (0, pad), (0, 0)))
+
+    def reshape_c(t):
+        return t.reshape(B, n_chunks, L, -1).transpose(1, 0, 2, 3)
+
+    def step(h, xs_):
+        xc, dtc, bc_, cc_ = xs_
+        y, h = _mamba_scan_chunk(xc, dtc, bc_, cc_, params["a_log"],
+                                 params["d_skip"], h)
+        return h, y
+
+    h, ys = jax.lax.scan(step, state["h"],
+                         (reshape_c(xconv), reshape_c(dt),
+                          reshape_c(Bmat), reshape_c(Cmat)))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, n_chunks * L, d_in)[:, :S]
+    y = y.astype(x.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    if return_state:
+        return out, {"h": h, "conv": new_conv}
+    return out

@@ -1,0 +1,493 @@
+"""Decoder-only transformer assembly (dense / MoE / VLM / hybrid families).
+
+Layers are grouped into *super-blocks* so heterogeneous per-layer patterns
+(MoE interleave, local:global attention, hybrid attn+mamba) become homogeneous
+stacks that ``jax.lax.scan`` can iterate — this keeps 512-device SPMD compiles
+small and fast regardless of depth. Period P = lcm(moe_every, local_ratio+1);
+params/caches are stacked (n_super, ...) per within-period position.
+
+Three entry points per model: ``loss`` (train), ``prefill`` (S tokens, builds
+KV cache, emits Gimbal MoE statistics), ``decode`` (1 token against the
+cache). MoE layers take the Gimbal expert ``placement`` (n_moe_layers, E) as a
+runtime input and emit per-layer A[s,e] / B[e] statistics as outputs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from math import gcd
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import moe as moe_mod
+from repro.models.attention import (decode_attention, flash_attention,
+                                    ring_positions)
+from repro.models.layers import (apply_rope, cross_entropy, dense_init,
+                                 embed_tokens, init_embed, init_mlp,
+                                 lm_logits, mlp, rms_norm)
+from repro.models.ssm import init_mamba, mamba_block, mamba_state_init
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerDesc:
+    local: bool = False    # sliding-window attention
+    moe: bool = False      # MoE FFN instead of dense
+    hybrid: bool = False   # parallel attn + mamba branches (hymba)
+
+
+def _lcm(a: int, b: int) -> int:
+    return a * b // gcd(a, b)
+
+
+def period_descriptors(cfg: ModelConfig) -> List[LayerDesc]:
+    moe_p = cfg.moe.moe_every if cfg.moe.enabled else 1
+    loc_p = (cfg.local_global_ratio + 1) if cfg.local_global_ratio > 0 else 1
+    P = _lcm(moe_p, loc_p)
+    if cfg.n_layers % P:
+        raise ValueError(
+            f"{cfg.name}: n_layers={cfg.n_layers} not divisible by period {P}")
+    descs = []
+    for j in range(P):
+        descs.append(LayerDesc(
+            local=cfg.is_local_layer(j),
+            moe=cfg.is_moe_layer(j),
+            hybrid=(cfg.family == "hybrid"),
+        ))
+    return descs
+
+
+def n_super_blocks(cfg: ModelConfig) -> int:
+    return cfg.n_layers // len(period_descriptors(cfg))
+
+
+# ------------------------------------------------------------------ init
+def init_attention(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    p = {
+        "wq": dense_init(ks[0], (d, cfg.q_dim), 0, dt),
+        "wk": dense_init(ks[1], (d, cfg.kv_dim), 0, dt),
+        "wv": dense_init(ks[2], (d, cfg.kv_dim), 0, dt),
+        "wo": dense_init(ks[3], (cfg.q_dim, d), 0, dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.q_dim,), dt)
+        p["bk"] = jnp.zeros((cfg.kv_dim,), dt)
+        p["bv"] = jnp.zeros((cfg.kv_dim,), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((cfg.head_dim,), jnp.float32)
+        p["k_norm"] = jnp.zeros((cfg.head_dim,), jnp.float32)
+    return p
+
+
+def init_layer(key, cfg: ModelConfig, desc: LayerDesc):
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {
+        "ln_attn": jnp.zeros((cfg.d_model,), jnp.float32),
+        "attn": init_attention(ks[0], cfg),
+        "ln_ffn": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    if desc.moe:
+        p["moe"] = moe_mod.init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, jnp.dtype(cfg.dtype))
+    if desc.hybrid:
+        p["mamba"] = init_mamba(ks[2], cfg.d_model, cfg.ssm.state_dim,
+                                cfg.ssm.conv_width, cfg.ssm.expand,
+                                jnp.dtype(cfg.dtype))
+        p["attn_out_norm"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        p["mamba_out_norm"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    if cfg.post_norms:
+        p["post_attn_norm"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        p["post_ffn_norm"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    return p
+
+
+def init_params(key, cfg: ModelConfig):
+    descs = period_descriptors(cfg)
+    ns = n_super_blocks(cfg)
+    k_embed, k_blocks = jax.random.split(key)
+    blocks = {}
+    for j, desc in enumerate(descs):
+        keys = jax.random.split(jax.random.fold_in(k_blocks, j), ns)
+        stacked = jax.vmap(lambda k: init_layer(k, cfg, desc))(keys)
+        blocks[f"pos{j}"] = stacked
+    return {
+        "embed": init_embed(k_embed, cfg),
+        "blocks": blocks,
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+
+
+# ------------------------------------------------------------------ cache
+def kv_len_for(cfg: ModelConfig, desc: LayerDesc, max_len: int) -> int:
+    if desc.local and cfg.sliding_window > 0:
+        return min(cfg.sliding_window, max_len)
+    return max_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               kv_dtype: str = "bfloat16"):
+    """kv_dtype='int8' stores quantized KV + per-(token, head) scales —
+    needed to fit e.g. the MHA 32k x 128 decode cell in 16 GB/chip."""
+    descs = period_descriptors(cfg)
+    ns = n_super_blocks(cfg)
+    quant = kv_dtype == "int8"
+    dt = jnp.int8 if quant else jnp.dtype(cfg.dtype)
+    cache = {}
+    for j, desc in enumerate(descs):
+        L = kv_len_for(cfg, desc, max_len)
+        c = {
+            "k": jnp.zeros((ns, batch, L, cfg.n_kv_heads, cfg.head_dim), dt),
+            "v": jnp.zeros((ns, batch, L, cfg.n_kv_heads, cfg.head_dim), dt),
+        }
+        if quant:
+            c["k_scale"] = jnp.zeros((ns, batch, L, cfg.n_kv_heads),
+                                     jnp.float32)
+            c["v_scale"] = jnp.zeros((ns, batch, L, cfg.n_kv_heads),
+                                     jnp.float32)
+        if desc.hybrid:
+            d_in = cfg.ssm.expand * cfg.d_model
+            c["mamba_h"] = jnp.zeros((ns, batch, d_in, cfg.ssm.state_dim),
+                                     jnp.float32)
+            c["mamba_conv"] = jnp.zeros(
+                (ns, batch, cfg.ssm.conv_width - 1, d_in), jnp.float32)
+        cache[f"pos{j}"] = c
+    return cache
+
+
+# ------------------------------------------------------------------ attention
+def _quantize_kv(t):
+    """(B, S, H, hd) -> (int8 values, (B, S, H) fp32 scales)."""
+    s = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1) / 127.0
+    q = jnp.round(t.astype(jnp.float32)
+                  / jnp.maximum(s, 1e-8)[..., None]).astype(jnp.int8)
+    return q, s
+
+
+def _qkv(lp, cfg, xn, positions):
+    B, S, _ = xn.shape
+    q = jnp.einsum("bsd,df->bsf", xn, lp["wq"])
+    k = jnp.einsum("bsd,df->bsf", xn, lp["wk"])
+    v = jnp.einsum("bsd,df->bsf", xn, lp["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
+    q = q.reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rms_norm(q, lp["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, lp["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_block(lp, cfg, desc, x, positions, cache, mode, policy=None):
+    """x: (B, S, D); positions (B, S). Returns (attn_out, new_cache)."""
+    B, S, _ = x.shape
+    xn = rms_norm(x, lp["ln_attn"], cfg.norm_eps)
+    q, k, v = _qkv(lp["attn"], cfg, xn, positions)
+    window = cfg.sliding_window if desc.local else 0
+    if policy is not None:
+        q, k, v = policy.shard_heads(q), policy.shard_heads(k), \
+            policy.shard_heads(v)
+
+    new_cache = cache
+    quant = cache is not None and "k_scale" in cache
+    if mode == "train":
+        out = flash_attention(q, k, v, q_pos=positions, k_pos=positions,
+                              causal=True, window=window,
+                              softcap_val=cfg.attn_logit_softcap)
+    elif mode == "prefill":
+        out = flash_attention(q, k, v, q_pos=positions, k_pos=positions,
+                              causal=True, window=window,
+                              softcap_val=cfg.attn_logit_softcap)
+        kw, ks = _quantize_kv(k) if quant else (k, None)
+        vw, vs = _quantize_kv(v) if quant else (v, None)
+        L = cache["k"].shape[1]  # (B, L, Hkv, hd) — superblock slice
+        if L >= S:
+            upd = lambda name, val: jax.lax.dynamic_update_slice_in_dim(
+                cache[name], val, 0, axis=1)
+            new_cache = dict(cache, k=upd("k", kw), v=upd("v", vw))
+            if quant:
+                new_cache["k_scale"] = upd("k_scale", ks)
+                new_cache["v_scale"] = upd("v_scale", vs)
+        else:  # ring: keep last L tokens at slots pos % L
+            tail_pos = positions[:, S - L:]
+            slots = tail_pos % L                       # (B, L)
+            bidx = jnp.arange(B)[:, None]
+            upd = lambda name, val: cache[name].at[bidx, slots].set(
+                val[:, S - L:])
+            new_cache = dict(cache, k=upd("k", kw), v=upd("v", vw))
+            if quant:
+                new_cache["k_scale"] = upd("k_scale", ks)
+                new_cache["v_scale"] = upd("v_scale", vs)
+        if policy is not None:
+            new_cache = dict(new_cache,
+                             k=policy.shard_kv_cache(new_cache["k"]),
+                             v=policy.shard_kv_cache(new_cache["v"]))
+            if quant:
+                new_cache["k_scale"] = policy.shard_kv_scale(
+                    new_cache["k_scale"])
+                new_cache["v_scale"] = policy.shard_kv_scale(
+                    new_cache["v_scale"])
+    else:  # decode: S == 1
+        L = cache["k"].shape[1]
+        pos = positions[:, 0]                          # (B,) current position
+        slot = pos % L
+        bidx = jnp.arange(B)
+        kw, ks = _quantize_kv(k) if quant else (k, None)
+        vw, vs = _quantize_kv(v) if quant else (v, None)
+        ck = cache["k"].at[bidx, slot].set(kw[:, 0])
+        cv = cache["v"].at[bidx, slot].set(vw[:, 0])
+        if policy is not None:
+            ck, cv = policy.shard_kv_cache(ck), policy.shard_kv_cache(cv)
+        new_cache = dict(cache, k=ck, v=cv)
+        cks = cvs = None
+        if quant:
+            cks = cache["k_scale"].at[bidx, slot].set(ks[:, 0])
+            cvs = cache["v_scale"].at[bidx, slot].set(vs[:, 0])
+            new_cache["k_scale"], new_cache["v_scale"] = cks, cvs
+        k_pos = ring_positions(pos, L)                 # (B, L), -1 invalid
+        n_split = policy.kv_split if policy is not None else 1
+        out = _split_decode(q, ck, cv, positions, k_pos, window,
+                            cfg.attn_logit_softcap, n_split, cks, cvs)
+
+    out = out.reshape(B, S, cfg.q_dim)
+    out = jnp.einsum("bsf,fd->bsd", out, lp["attn"]["wo"])
+    if cfg.post_norms:
+        out = rms_norm(out, lp["post_attn_norm"], cfg.norm_eps)
+    return out, new_cache
+
+
+def _split_decode(q, ck, cv, positions, k_pos, window, cap, n_split,
+                  k_scale=None, v_scale=None):
+    """Flash-decode with KV split across ``n_split`` shards (split-K SP)."""
+    B, one, Hq, hd = q.shape
+    L = ck.shape[1]
+    if n_split <= 1 or L % n_split:
+        return decode_attention(q, ck, cv, q_pos=positions, k_pos=k_pos,
+                                window=window, softcap_val=cap,
+                                k_scale=k_scale, v_scale=v_scale)
+    Ls = L // n_split
+    Hkv = ck.shape[2]
+    spl = lambda t: t.reshape(B, n_split, Ls, Hkv, hd).transpose(1, 0, 2, 3, 4)
+    cks_v, cvs_v = spl(ck), spl(cv)
+    kps = k_pos.reshape(B, n_split, Ls).transpose(1, 0, 2)
+    quant = k_scale is not None
+    spl_s = lambda t: t.reshape(B, n_split, Ls, Hkv).transpose(1, 0, 2, 3)
+    kss = spl_s(k_scale) if quant else kps
+    vss = spl_s(v_scale) if quant else kps
+
+    def partial_attn(kc, vc, kp, ks, vs):
+        from repro.models.attention import _attend_one_kv_block, NEG_INF
+        G = Hq // Hkv
+        qg = q.reshape(B, 1, Hkv, G, hd)
+        m0 = jnp.full((B, Hkv, G, 1), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, 1), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, 1, hd), jnp.float32)
+        m, l, acc = _attend_one_kv_block(
+            qg, kc, vc, positions, kp, scale=1.0 / np.sqrt(hd), causal=True,
+            window=window, cap=cap, m=m0, l=l0, acc=a0,
+            ks=ks if quant else None, vs=vs if quant else None)
+        return m, l, acc
+
+    ms, ls, accs = jax.vmap(partial_attn)(cks_v, cvs_v, kps, kss, vss)
+    m_star = jnp.max(ms, axis=0)
+    w = jnp.exp(ms - m_star)
+    l_tot = jnp.sum(ls * w, axis=0)
+    acc_tot = jnp.sum(accs * w[..., None], axis=0)
+    out = acc_tot / jnp.maximum(l_tot, 1e-30)[..., None]
+    # (B, Hkv, G, 1, hd) -> (B, 1, Hq, hd)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, 1, Hq, hd).astype(q.dtype)
+
+
+# ------------------------------------------------------------------ layer
+def decoder_layer(lp, cfg, desc, x, positions, cache, mode, placement_row,
+                  source_ids, n_sources, policy=None, collect_stats=True):
+    """Returns (x, new_cache, stats_or_None)."""
+    attn_out, new_cache = attention_block(lp, cfg, desc, x, positions, cache,
+                                          mode, policy)
+    if desc.hybrid:
+        xn = rms_norm(x, lp["ln_attn"], cfg.norm_eps)
+        state = None
+        if mode == "decode":
+            state = {"h": cache["mamba_h"], "conv": cache["mamba_conv"]}
+        m_out, m_state = mamba_block(
+            lp["mamba"], xn, cfg.ssm.state_dim, cfg.ssm.conv_width,
+            state=state, chunk=cfg.ssm.chunk_size, return_state=True)
+        if mode in ("prefill", "decode"):
+            new_cache = dict(new_cache, mamba_h=m_state["h"],
+                             mamba_conv=m_state["conv"])
+        # hymba: branch-normalized mean fusion
+        fused = 0.5 * (rms_norm(attn_out, lp["attn_out_norm"], cfg.norm_eps)
+                       + rms_norm(m_out, lp["mamba_out_norm"], cfg.norm_eps))
+        x = x + fused
+    else:
+        x = x + attn_out
+    if policy is not None:
+        x = policy.shard_resid(x)
+
+    xn = rms_norm(x, lp["ln_ffn"], cfg.norm_eps)
+    stats = None
+    if desc.moe:
+        y, stats = moe_mod.moe_layer(
+            lp["moe"], cfg, xn, placement_row, source_ids=source_ids,
+            n_sources=n_sources, policy=policy, collect_stats=collect_stats)
+    else:
+        y = mlp(lp["mlp"], xn, policy)
+    if cfg.post_norms:
+        y = rms_norm(y, lp["post_ffn_norm"], cfg.norm_eps)
+    x = x + y
+    if policy is not None:
+        x = policy.shard_resid(x)
+    return x, new_cache, stats
+
+
+# ------------------------------------------------------------------ model
+def _moe_positions(descs) -> List[int]:
+    return [j for j, d in enumerate(descs) if d.moe]
+
+
+def identity_placement(cfg: ModelConfig):
+    n_moe = cfg.n_moe_layers
+    if n_moe == 0:
+        return jnp.zeros((0, 0), jnp.int32)
+    return jnp.tile(jnp.arange(cfg.moe.n_experts, dtype=jnp.int32),
+                    (n_moe, 1))
+
+
+def superblock_forward(blk_params, cfg, descs, x, positions, blk_cache,
+                       mode, blk_placement, source_ids, n_sources, policy,
+                       collect_stats):
+    """One super-block (period of layers). Module-level so the roofline
+    analyzer can lower it standalone (scan bodies are counted once by
+    XLA cost analysis — launch/roofline.py scales by trip count)."""
+    new_blk_cache = {} if blk_cache is not None else None
+    stats_list = []
+    mi = 0
+    for j, desc in enumerate(descs):
+        lp = blk_params[f"pos{j}"]
+        c = blk_cache[f"pos{j}"] if blk_cache is not None else None
+        prow = None
+        if desc.moe:
+            prow = (blk_placement[mi] if blk_placement is not None
+                    else jnp.arange(cfg.moe.n_experts, dtype=jnp.int32))
+            mi += 1
+        x, nc, st = decoder_layer(
+            lp, cfg, desc, x, positions, c, mode, prow, source_ids,
+            n_sources, policy, collect_stats)
+        if blk_cache is not None:
+            new_blk_cache[f"pos{j}"] = nc
+        if st is not None:
+            stats_list.append(st)
+    stats = None
+    if stats_list and collect_stats:
+        stats = {k: jnp.stack([s[k] for s in stats_list])
+                 for k in stats_list[0]}
+    return x, new_blk_cache, stats
+
+
+def _stack_forward(params, cfg, x, positions, cache, mode, placement,
+                   source_ids, n_sources, policy, collect_stats, remat):
+    """Scan over super-blocks. x: (B, S, D)."""
+    descs = period_descriptors(cfg)
+    ns = n_super_blocks(cfg)
+    moe_pos = _moe_positions(descs)
+    mp = len(moe_pos)
+
+    placement_r = None
+    if mp and placement is not None and placement.size:
+        placement_r = placement.reshape(ns, mp, -1)
+
+    def body(x, xs):
+        blk_params, blk_cache, blk_placement = xs
+        x, new_blk_cache, stats = superblock_forward(
+            blk_params, cfg, descs, x, positions, blk_cache, mode,
+            blk_placement, source_ids, n_sources, policy, collect_stats)
+        return x, (new_blk_cache, stats)
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+
+    xs = (params["blocks"], cache, placement_r)
+    x, (new_cache, stats) = jax.lax.scan(body, x, xs)
+    if stats is not None:
+        stats = {k: v.reshape((ns * mp,) + v.shape[2:])
+                 for k, v in stats.items()}
+    return x, new_cache, stats
+
+
+def _inputs_to_embed(params, cfg, batch):
+    if cfg.input_mode == "embeddings" and "embeddings" in batch:
+        return batch["embeddings"]
+    return embed_tokens(params["embed"], cfg, batch["tokens"])
+
+
+def loss_fn(params, cfg: ModelConfig, batch, *, placement=None,
+            policy=None, aux_weight: float = 0.01):
+    """batch: {tokens|embeddings, labels, (mask)} -> (loss, metrics)."""
+    x = _inputs_to_embed(params, cfg, batch)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    if policy is not None:
+        x = policy.shard_resid(x)
+    if placement is None:
+        placement = identity_placement(cfg)
+    x, _, stats = _stack_forward(
+        params, cfg, x, positions, None, "train", placement, None, 0,
+        policy, collect_stats=cfg.moe.enabled, remat=True)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = lm_logits(params["embed"], cfg, x)
+    mask = batch.get("mask")
+    ce = cross_entropy(logits, batch["labels"], mask)
+    aux = jnp.asarray(0.0, jnp.float32)
+    if stats is not None and "aux_loss" in stats:
+        aux = jnp.mean(stats["aux_loss"])
+    metrics = {"ce": ce, "aux": aux}
+    return ce + aux_weight * aux, metrics
+
+
+def prefill(params, cfg: ModelConfig, batch, cache, *, placement=None,
+            source_ids=None, n_sources: int = 0, policy=None,
+            collect_stats: bool = True):
+    """batch: {tokens|embeddings (B,S), lengths (B,)} -> (logits, cache, stats)."""
+    x = _inputs_to_embed(params, cfg, batch)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    if policy is not None:
+        x = policy.shard_resid(x)
+    if placement is None:
+        placement = identity_placement(cfg)
+    x, cache, stats = _stack_forward(
+        params, cfg, x, positions, cache, "prefill", placement, source_ids,
+        n_sources, policy, collect_stats, remat=False)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    lengths = batch.get("lengths")
+    if lengths is None:
+        last = x[:, -1]
+    else:
+        last = x[jnp.arange(B), jnp.clip(lengths - 1, 0, S - 1)]
+    logits = lm_logits(params["embed"], cfg, last)
+    return logits, cache, stats
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache, lengths, *,
+                placement=None, source_ids=None, n_sources: int = 0,
+                policy=None, collect_stats: bool = True):
+    """tokens (B,) int32; lengths (B,) current context length per row."""
+    x = embed_tokens(params["embed"], cfg, tokens[:, None])   # (B, 1, D)
+    positions = lengths[:, None].astype(jnp.int32)
+    if placement is None:
+        placement = identity_placement(cfg)
+    x, cache, stats = _stack_forward(
+        params, cfg, x, positions, cache, "decode", placement, source_ids,
+        n_sources, policy, collect_stats, remat=False)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = lm_logits(params["embed"], cfg, x[:, 0])
+    return logits, cache, stats

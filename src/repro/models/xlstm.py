@@ -1,0 +1,116 @@
+"""xLSTM model assembly (sLSTM + mLSTM blocks, unrolled — 12 small layers).
+
+No KV cache: recurrent state is O(1) per request, which is why the long_500k
+cell runs for this arch. Gimbal's "KV pressure" trace maps to the (constant)
+recurrent-state footprint (see DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import (cross_entropy, embed_tokens, init_embed,
+                                 lm_logits, rms_norm)
+from repro.models.ssm import (init_mlstm, init_slstm, mlstm_block,
+                              mlstm_state_init, slstm_block, slstm_state_init)
+
+
+def is_slstm(cfg: ModelConfig, i: int) -> bool:
+    se = cfg.ssm.slstm_every
+    return bool(se) and (i % se == se - 1)
+
+
+def init_params(key, cfg: ModelConfig):
+    ks = jax.random.split(key, cfg.n_layers + 1)
+    blocks = []
+    for i in range(cfg.n_layers):
+        if is_slstm(cfg, i):
+            blocks.append({"kind_slstm": init_slstm(ks[i], cfg.d_model,
+                                                    cfg.n_heads)})
+        else:
+            blocks.append({"kind_mlstm": init_mlstm(ks[i], cfg.d_model,
+                                                    cfg.n_heads)})
+    return {
+        "embed": init_embed(ks[-1], cfg),
+        "blocks": blocks,
+        "block_norms": [jnp.zeros((cfg.d_model,), jnp.float32)
+                        for _ in range(cfg.n_layers)],
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int = 0,
+               kv_dtype: str = "bfloat16"):
+    """'Cache' = recurrent states (independent of max_len and kv_dtype)."""
+    del kv_dtype
+    states = []
+    d_in = 2 * cfg.d_model
+    hd_m = d_in // cfg.n_heads
+    hd_s = cfg.d_model // cfg.n_heads
+    for i in range(cfg.n_layers):
+        if is_slstm(cfg, i):
+            states.append(slstm_state_init(batch, cfg.n_heads, hd_s))
+        else:
+            states.append(mlstm_state_init(batch, cfg.n_heads, hd_m))
+    return states
+
+
+def _forward(params, cfg, x, states, return_states):
+    new_states = []
+    for i in range(cfg.n_layers):
+        bp = params["blocks"][i]
+        xn = rms_norm(x, params["block_norms"][i], cfg.norm_eps)
+        st = states[i] if states is not None else None
+        if "kind_slstm" in bp:
+            out = slstm_block(bp["kind_slstm"], xn, cfg.n_heads, state=st,
+                              return_state=return_states,
+                              norm_eps=cfg.norm_eps)
+        else:
+            out = mlstm_block(bp["kind_mlstm"], xn, cfg.n_heads, state=st,
+                              chunk=cfg.ssm.chunk_size,
+                              return_state=return_states,
+                              norm_eps=cfg.norm_eps)
+        if return_states:
+            out, ns = out
+            new_states.append(ns)
+        x = x + out
+    return x, (new_states if return_states else None)
+
+
+def loss_fn(params, cfg: ModelConfig, batch, *, placement=None, policy=None,
+            aux_weight: float = 0.0):
+    x = embed_tokens(params["embed"], cfg, batch["tokens"])
+    x, _ = _forward(params, cfg, x, None, False)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = lm_logits(params["embed"], cfg, x)
+    ce = cross_entropy(logits, batch["labels"], batch.get("mask"))
+    return ce, {"ce": ce, "aux": jnp.asarray(0.0, jnp.float32)}
+
+
+def prefill(params, cfg: ModelConfig, batch, cache, *, placement=None,
+            source_ids=None, n_sources: int = 0, policy=None,
+            collect_stats: bool = True):
+    x = embed_tokens(params["embed"], cfg, batch["tokens"])
+    B = x.shape[0]
+    x, states = _forward(params, cfg, x, cache, True)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    lengths = batch.get("lengths")
+    if lengths is None:
+        last = x[:, -1]
+    else:
+        last = x[jnp.arange(B), jnp.clip(lengths - 1, 0, x.shape[1] - 1)]
+    logits = lm_logits(params["embed"], cfg, last)
+    return logits, states, None
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache, lengths, *,
+                placement=None, source_ids=None, n_sources: int = 0,
+                policy=None, collect_stats: bool = True):
+    x = embed_tokens(params["embed"], cfg, tokens[:, None])
+    x, states = _forward(params, cfg, x, cache, True)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = lm_logits(params["embed"], cfg, x[:, 0])
+    return logits, states, None

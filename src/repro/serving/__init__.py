@@ -1,0 +1,12 @@
+from repro.serving.costmodel import CostModelConfig, EngineCostModel
+from repro.serving.engine import DPEngine, EngineConfig
+from repro.serving.kvcache import BlockPool, SlotAllocator
+from repro.serving.request import Request, RequestState
+from repro.serving.routing_sim import SourceExpertTraffic
+from repro.serving.simulator import (PAPER_SYSTEMS, SimResult, SystemConfig,
+                                     simulate)
+
+__all__ = ["CostModelConfig", "EngineCostModel", "DPEngine", "EngineConfig",
+           "BlockPool", "SlotAllocator", "Request", "RequestState",
+           "SourceExpertTraffic", "PAPER_SYSTEMS", "SimResult",
+           "SystemConfig", "simulate"]

@@ -1,0 +1,80 @@
+"""Engine step-cost model for the simulated data plane.
+
+Grounded in the same roofline constants as §Roofline (EXPERIMENTS.md):
+prefill is compute-bound (2*N_active FLOPs/token against the engine's TP
+group peak), decode is memory-bound (active weights + running KV read per
+step), the MoE expert FFN portion is scaled by the per-rank load imbalance
+under the current expert placement, and cross-DP all-to-all bytes pay the
+interconnect. Defaults approximate the paper's testbed scale (Qwen3-30B-A3B,
+DP=2 engines x TP=2, EP over 4 devices).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModelConfig:
+    """Calibrated to the paper's operating point: Qwen3-30B-A3B on a
+    DP=2 x TP=2 node, ~90 running requests/engine and ~27% KV usage at
+    RPS=4 (paper §7.3 'we inspect the RPS=4 Random traces')."""
+
+    active_params: float = 3.35e9      # Qwen3-30B-A3B active
+    bytes_per_param: float = 2.0
+    kv_bytes_per_token: float = 96e3   # 48L * 2 * 4kv * 128hd * 2B
+    # per-engine (TP group) effective hardware
+    peak_flops: float = 1.8e14
+    flops_efficiency: float = 0.45     # eff ~5.9e13 FLOP/s
+    hbm_bw: float = 3.3e11             # effective bytes/s for decode reads
+    step_overhead_s: float = 0.005     # scheduler+launch overhead per step
+    moe_fraction: float = 0.70         # share of step in expert FFNs
+    n_moe_layers: int = 48
+    top_k: int = 8
+    d_model: int = 2048
+    # all-to-all: per-layer latency floor + remote-fraction-scaled term
+    a2a_lat_local_s: float = 50e-6
+    a2a_lat_remote_s: float = 200e-6
+    a2a_bytes_per_token: float = 2 * 2048 * 2.0  # dispatch+combine, bf16
+    interconnect_bw: float = 6.0e10    # effective cross-DP a2a bytes/s
+
+    @property
+    def eff_flops(self) -> float:
+        return self.peak_flops * self.flops_efficiency
+
+
+class EngineCostModel:
+    def __init__(self, cfg: CostModelConfig = CostModelConfig()):
+        self.cfg = cfg
+
+    def prefill_time(self, tokens: int) -> float:
+        fl = 2.0 * self.cfg.active_params * tokens
+        return fl / self.cfg.eff_flops
+
+    def decode_time(self, n_seqs: int, total_context: int) -> float:
+        if n_seqs == 0:
+            return 0.0
+        weight_read = self.cfg.active_params * self.cfg.bytes_per_param
+        kv_read = total_context * self.cfg.kv_bytes_per_token
+        mem = (weight_read + kv_read) / self.cfg.hbm_bw
+        comp = 2.0 * self.cfg.active_params * n_seqs / self.cfg.eff_flops
+        return max(mem, comp)
+
+    def step_time(self, prefill_tokens: int, n_decode: int,
+                  decode_context: int, moe_imbalance: float = 1.0,
+                  remote_frac: float = 0.0) -> float:
+        """moe_imbalance: max/mean per-rank expert load (>=1); remote_frac:
+        fraction of routed tokens crossing DP groups under the placement."""
+        tokens = prefill_tokens + n_decode
+        base = self.prefill_time(prefill_tokens) + \
+            self.decode_time(n_decode, decode_context)
+        # imbalance stretches only the expert-FFN share of the step
+        moe_pen = base * self.cfg.moe_fraction * (moe_imbalance - 1.0)
+        comm = self.cfg.n_moe_layers * (
+            self.cfg.a2a_lat_local_s + remote_frac * self.cfg.a2a_lat_remote_s)
+        # dispatch+combine bytes cross the interconnect once per MoE layer
+        comm += (tokens * self.cfg.top_k * remote_frac
+                 * self.cfg.a2a_bytes_per_token * self.cfg.n_moe_layers
+                 / self.cfg.interconnect_bw)
+        return self.cfg.step_overhead_s + base + moe_pen + comm

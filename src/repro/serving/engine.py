@@ -1,0 +1,195 @@
+"""DP inference engine: continuous batching + chunked prefill + preemption.
+
+One engine = one DP replica (a TP group on the mesh). The engine owns a
+local waiting queue (ordered by the configured intra-engine policy), a paged
+KV pool, and a backend (simulated cost model or real tiny JAX model). Every
+completed step produces an EngineTrace — the async trace stream Algorithm 1
+consumes — and MoE routing statistics for the profiler.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.queue_policy import QueueConfig, order_queue, order_queue_fcfs
+from repro.core.traces import EngineTrace
+from repro.serving.costmodel import EngineCostModel
+from repro.serving.kvcache import BlockPool
+from repro.serving.request import Request, RequestState
+from repro.serving.routing_sim import SourceExpertTraffic
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    token_budget: int = 2048          # per-step chunked-prefill budget
+    max_running: int = 256
+    kv_tokens: int = 700_000          # KV pool capacity (tokens/engine)
+    kv_block: int = 16
+    queue_policy: str = "sjf_aging"   # or "fcfs" (vLLM baseline)
+    theta_age_s: float = 5.0
+
+
+class DPEngine:
+    def __init__(self, engine_id: int, cfg: EngineConfig,
+                 cost: Optional[EngineCostModel] = None,
+                 traffic: Optional[SourceExpertTraffic] = None,
+                 top_k: int = 8):
+        self.engine_id = engine_id
+        self.cfg = cfg
+        self.cost = cost or EngineCostModel()
+        self.traffic = traffic
+        self.top_k = top_k
+        self.pool = BlockPool(cfg.kv_tokens, cfg.kv_block)
+        self.waiting: List[Request] = []
+        self.running: List[Request] = []
+        self.finished: List[Request] = []
+        self.qcfg = QueueConfig(theta_age_s=cfg.theta_age_s)
+        # backend pressure inputs, refreshed by the coordinator each window
+        self.moe_imbalance: float = 1.0
+        self.remote_frac: float = 0.0
+        self.moe_pressure: float = 0.0
+        # step telemetry
+        self.total_prefill_tokens = 0
+        self.total_decode_tokens = 0
+        self.busy_time = 0.0
+
+    # ---- queue ----------------------------------------------------------
+    def enqueue(self, req: Request, now: float) -> None:
+        req.engine_id = self.engine_id
+        req.dispatch_time = now
+        req.state = RequestState.WAITING
+        self.waiting.append(req)
+
+    def _order_waiting(self, now: float) -> None:
+        if self.cfg.queue_policy == "sjf_aging":
+            self.waiting = order_queue(self.waiting, now, self.qcfg)
+        else:
+            self.waiting = order_queue_fcfs(self.waiting, now)
+
+    # ---- admission / preemption -----------------------------------------
+    def _try_admit(self, now: float) -> None:
+        self._order_waiting(now)
+        admitted = []
+        for r in self.waiting:
+            if len(self.running) + len(admitted) >= self.cfg.max_running:
+                break
+            first_chunk = min(r.remaining_prefill, self.cfg.token_budget)
+            if self.pool.allocate(r.req_id, r.context_len + first_chunk):
+                r.state = RequestState.RUNNING
+                admitted.append(r)
+            else:
+                break  # FIFO-in-priority-order admission (no bypass)
+        for r in admitted:
+            self.waiting.remove(r)
+            self.running.append(r)
+
+    def _preempt_one(self) -> bool:
+        """Evict the latest-arrived decoding request (vLLM recompute mode)."""
+        cands = [r for r in self.running if r.remaining_prefill == 0]
+        if not cands:
+            cands = self.running
+        if not cands:
+            return False
+        victim = max(cands, key=lambda r: r.arrival_time)
+        self.running.remove(victim)
+        self.pool.free(victim.req_id)
+        victim.prefill_done = 0
+        victim.generated = 0
+        victim.n_preemptions += 1
+        victim.state = RequestState.PREEMPTED
+        self.waiting.append(victim)
+        return True
+
+    # ---- one continuous-batching step -------------------------------------
+    def step(self, now: float) -> Tuple[float, Optional[np.ndarray], Dict]:
+        """Returns (duration_s, routed_counts (L, E) or None, step_info)."""
+        self._try_admit(now)
+
+        decode_reqs = [r for r in self.running if r.remaining_prefill == 0]
+        prefill_reqs = [r for r in self.running if r.remaining_prefill > 0]
+
+        # KV growth for decoders; preempt under pressure
+        for r in list(decode_reqs):
+            while not self.pool.allocate(r.req_id, r.context_len + 1):
+                if not self._preempt_one():
+                    break
+            if r.state is RequestState.PREEMPTED:
+                decode_reqs.remove(r)
+
+        budget = max(self.cfg.token_budget - len(decode_reqs), 0)
+        prefill_work: List[Tuple[Request, int]] = []
+        for r in prefill_reqs:
+            if budget <= 0:
+                break
+            chunk = min(r.remaining_prefill, budget)
+            if not self.pool.allocate(r.req_id, r.prefill_done + chunk):
+                continue
+            prefill_work.append((r, chunk))
+            budget -= chunk
+
+        n_prefill = sum(c for _, c in prefill_work)
+        n_decode = len(decode_reqs)
+        ctx = sum(r.context_len for r in decode_reqs)
+        if n_prefill == 0 and n_decode == 0:
+            return 0.0, None, {"idle": True}
+
+        dur = self.cost.step_time(n_prefill, n_decode, ctx,
+                                  self.moe_imbalance, self.remote_frac)
+
+        # ---- apply step effects
+        for r, chunk in prefill_work:
+            r.prefill_done += chunk
+            if r.remaining_prefill == 0:
+                # last prefill chunk emits the first token at step end
+                r.generated = 1
+                r.first_token_time = now + dur
+                if r.done:
+                    self._finish(r, now + dur)
+        for r in decode_reqs:
+            r.generated += 1
+            if r.generated == 1:
+                r.first_token_time = now + dur
+            if r.done:
+                self._finish(r, now + dur)
+
+        self.total_prefill_tokens += n_prefill
+        self.total_decode_tokens += n_decode
+        self.busy_time += dur
+
+        routed = None
+        if self.traffic is not None:
+            routed = self.traffic.sample_counts(
+                self.engine_id, n_prefill + n_decode, self.top_k)
+            self.traffic.maybe_drift()
+
+        return dur, routed, {"prefill_tokens": n_prefill,
+                             "decode_tokens": n_decode}
+
+    def _finish(self, r: Request, t: float) -> None:
+        r.state = RequestState.FINISHED
+        r.finish_time = t
+        if r in self.running:
+            self.running.remove(r)
+        self.pool.free(r.req_id)
+        self.finished.append(r)
+
+    # ---- trace report -----------------------------------------------------
+    def trace(self, now: float) -> EngineTrace:
+        return EngineTrace(
+            engine_id=self.engine_id,
+            remaining_prefill_tokens=float(
+                sum(r.remaining_prefill for r in self.running)),
+            waiting_prefill_tokens=float(
+                sum(r.remaining_prefill for r in self.waiting)),
+            kv_usage=self.pool.usage,
+            moe_pressure=self.moe_pressure,
+            n_running=len(self.running),
+            n_waiting=len(self.waiting),
+            timestamp=now,
+        )
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.running or self.waiting)

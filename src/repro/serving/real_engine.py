@@ -1,0 +1,166 @@
+"""Real-data-plane DP engine: serves an actual JAX model (tiny configs).
+
+Same control-plane surface as the simulated engine (traces, queue policy,
+KV accounting, routing statistics) but every token comes from real forward
+passes: slot-indexed KV cache, one-shot prefill per admitted request, one
+batched decode step per engine step. Routing statistics are REAL router
+outputs, collected with the fused kernel path (kernels/ops) — so the
+Gimbal coordinator runs unmodified against either plane.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.queue_policy import QueueConfig, order_queue
+from repro.core.traces import EngineTrace
+from repro.models import build_model
+from repro.models.transformer import identity_placement
+from repro.serving.kvcache import SlotAllocator
+from repro.serving.request import Request, RequestState
+
+
+class RealModelEngine:
+    def __init__(self, engine_id: int, cfg, params, *, max_slots: int = 8,
+                 max_len: int = 128, n_sources: int = 2, seed: int = 0):
+        self.engine_id = engine_id
+        self.cfg = cfg
+        self.fns = build_model(cfg)
+        self.params = params
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.n_sources = n_sources
+        self.cache = self.fns.init_cache(max_slots, max_len)
+        self.slots = SlotAllocator(max_slots)
+        self.lengths = np.zeros(max_slots, np.int32)
+        self.active = np.zeros(max_slots, bool)
+        self.req_of_slot: Dict[int, Request] = {}
+        self.waiting: List[Request] = []
+        self.placement = np.asarray(identity_placement(cfg))
+        self.qcfg = QueueConfig(theta_age_s=5.0)
+        self.step_count = 0
+        self.stats_log: List[Dict] = []
+
+        def _decode(params, tokens, cache, lengths, placement):
+            return self.fns.decode(params, tokens, cache, lengths,
+                                   placement=placement,
+                                   source_ids=jnp.full(
+                                       (max_slots,), engine_id, jnp.int32),
+                                   n_sources=n_sources,
+                                   collect_stats=cfg.moe.enabled)
+
+        self._decode = jax.jit(_decode)
+
+        def _prefill(params, batch, cache, placement):
+            return self.fns.prefill(
+                params, batch, cache, placement=placement,
+                source_ids=jnp.full((1,), engine_id, jnp.int32),
+                n_sources=n_sources, collect_stats=cfg.moe.enabled)
+
+        self._prefill = jax.jit(_prefill)
+
+    # ---- admission -----------------------------------------------------
+    def enqueue(self, req: Request, now: float) -> None:
+        req.engine_id = self.engine_id
+        req.dispatch_time = now
+        self.waiting.append(req)
+
+    def _admit(self, now: float) -> None:
+        self.waiting = order_queue(self.waiting, now, self.qcfg)
+        admitted = []
+        for r in self.waiting:
+            slot = self.slots.acquire(r.req_id)
+            if slot is None:
+                break
+            self._prefill_into_slot(r, slot, now)
+            admitted.append(r)
+        for r in admitted:
+            self.waiting.remove(r)
+
+    def _prefill_into_slot(self, req: Request, slot: int, now: float) -> None:
+        toks = jnp.asarray(req.prompt_tokens, jnp.int32)[None, :]
+        batch = {"tokens": toks,
+                 "lengths": jnp.asarray([toks.shape[1]], jnp.int32)}
+        cache1 = self.fns.init_cache(1, self.max_len)
+        logits, cache1, stats = self._prefill(
+            self.params, batch, cache1, jnp.asarray(self.placement))
+        # splice the single-row cache into the slot
+        def put(big, small):
+            if big.ndim >= 2 and small.shape[0] == big.shape[0] and \
+                    big.ndim == small.ndim:
+                return big.at[:, slot].set(small[:, 0])
+            return big
+        self.cache = jax.tree.map(put, self.cache, cache1)
+        tok = int(jnp.argmax(logits[0]))
+        req.prefill_done = req.prompt_len
+        req.generated = 1
+        req.output_tokens = [tok]
+        req.first_token_time = now
+        req.state = RequestState.RUNNING
+        self.lengths[slot] = req.prompt_len
+        self.active[slot] = True
+        self.req_of_slot[slot] = req
+        if stats is not None:
+            self.stats_log.append(jax.tree.map(np.asarray, stats))
+
+    # ---- one step --------------------------------------------------------
+    def step(self, now: float):
+        self._admit(now)
+        if not self.active.any():
+            return None
+        tokens = np.zeros(self.max_slots, np.int32)
+        for slot, req in self.req_of_slot.items():
+            tokens[slot] = req.output_tokens[-1]
+        logits, self.cache, stats = self._decode(
+            self.params, jnp.asarray(tokens), self.cache,
+            jnp.asarray(self.lengths), jnp.asarray(self.placement))
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        finished = []
+        for slot in list(self.req_of_slot):
+            req = self.req_of_slot[slot]
+            req.output_tokens.append(int(nxt[slot]))
+            req.generated += 1
+            self.lengths[slot] += 1
+            if req.done or self.lengths[slot] >= self.max_len - 1:
+                req.state = RequestState.FINISHED
+                req.finish_time = now
+                finished.append(req)
+                self.active[slot] = False
+                self.lengths[slot] = 0
+                del self.req_of_slot[slot]
+                self.slots.release(req.req_id)
+        if stats is not None:
+            self.stats_log.append(jax.tree.map(np.asarray, stats))
+        self.step_count += 1
+        return finished
+
+    # ---- traces ----------------------------------------------------------
+    def trace(self, now: float) -> EngineTrace:
+        return EngineTrace(
+            engine_id=self.engine_id,
+            remaining_prefill_tokens=0.0,
+            waiting_prefill_tokens=float(
+                sum(r.prompt_len for r in self.waiting)),
+            kv_usage=float(self.active.sum()) / self.max_slots,
+            n_running=int(self.active.sum()),
+            n_waiting=len(self.waiting),
+            timestamp=now,
+        )
+
+    def window_stats(self):
+        """Accumulated (B, A) since last call — feeds the coordinator."""
+        if not self.stats_log:
+            return None, None
+        B = sum(s["expert_counts"] for s in self.stats_log)
+        A = sum(s["source_expert"] for s in self.stats_log)
+        self.stats_log.clear()
+        return np.asarray(B), np.asarray(A)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting) or bool(self.active.any())

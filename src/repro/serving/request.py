@@ -1,0 +1,62 @@
+"""Request lifecycle for the serving stack (real engine + simulator)."""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import List, Optional
+
+
+class RequestState(enum.Enum):
+    WAITING = "waiting"
+    RUNNING = "running"        # prefill in progress or decoding
+    PREEMPTED = "preempted"    # evicted under KV pressure; will recompute
+    FINISHED = "finished"
+
+
+@dataclasses.dataclass
+class Request:
+    req_id: int
+    prompt_len: int
+    max_new_tokens: int
+    arrival_time: float
+    prompt_tokens: Optional[List[int]] = None   # real engine only
+
+    state: RequestState = RequestState.WAITING
+    engine_id: int = -1
+    prefill_done: int = 0          # tokens of prompt already prefilled
+    generated: int = 0
+    output_tokens: Optional[List[int]] = None
+
+    dispatch_time: float = -1.0
+    first_token_time: float = -1.0
+    finish_time: float = -1.0
+    n_preemptions: int = 0
+
+    # ---- trace-signal helpers -----------------------------------------
+    @property
+    def remaining_prefill(self) -> int:
+        return max(self.prompt_len - self.prefill_done, 0)
+
+    @property
+    def context_len(self) -> int:
+        return self.prefill_done + self.generated
+
+    @property
+    def done(self) -> bool:
+        return self.generated >= self.max_new_tokens
+
+    # ---- metrics --------------------------------------------------------
+    @property
+    def ttft(self) -> float:
+        return self.first_token_time - self.arrival_time
+
+    @property
+    def tpot(self) -> float:
+        """Mean decode latency per output token, excluding the first."""
+        if self.generated <= 1:
+            return 0.0
+        return (self.finish_time - self.first_token_time) / (self.generated - 1)
+
+    @property
+    def e2e(self) -> float:
+        return self.finish_time - self.arrival_time

@@ -1,0 +1,8 @@
+from repro.train.optimizer import AdamWConfig, OptState, apply_updates, \
+    init_opt_state
+from repro.train.train_step import (TrainState, compress_grads_int8,
+                                    make_train_state, make_train_step)
+
+__all__ = ["AdamWConfig", "OptState", "apply_updates", "init_opt_state",
+           "TrainState", "compress_grads_int8", "make_train_state",
+           "make_train_step"]

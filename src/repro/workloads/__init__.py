@@ -1,0 +1,4 @@
+from repro.workloads.burstgpt import (DISTRIBUTIONS, generate_trace,
+                                      length_cdf)
+
+__all__ = ["DISTRIBUTIONS", "generate_trace", "length_cdf"]

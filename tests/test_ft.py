@@ -1,0 +1,132 @@
+"""Fault tolerance: checkpoint atomicity/roundtrip, health, elastic, and
+gradient compression."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import EngineTrace, GimbalScheduler, TraceTable
+from repro.ft import (ElasticController, EngineHealthMonitor, HealthConfig,
+                      checkpoint_step, restore_checkpoint, save_checkpoint,
+                      restore_serving_state, save_serving_state)
+from repro.models import build_model
+from repro.train import (AdamWConfig, compress_grads_int8, make_train_state,
+                         make_train_step)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_checkpoint_roundtrip_and_step(tmp_path):
+    cfg = get_smoke_config("qwen3-8b")
+    fns = build_model(cfg)
+    params = fns.init(KEY)
+    path = str(tmp_path / "ckpt")
+    save_checkpoint(path, params, step=7)
+    assert checkpoint_step(path) == 7
+    restored = restore_checkpoint(path, params)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_atomic_overwrite(tmp_path):
+    path = str(tmp_path / "ckpt")
+    save_checkpoint(path, {"a": jnp.ones(4)}, step=1)
+    save_checkpoint(path, {"a": jnp.zeros(4)}, step=2)
+    assert checkpoint_step(path) == 2
+    out = restore_checkpoint(path, {"a": jnp.zeros(4)})
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.zeros(4))
+
+
+def test_checkpoint_structure_mismatch_raises(tmp_path):
+    path = str(tmp_path / "ckpt")
+    save_checkpoint(path, {"a": jnp.ones(4)})
+    with pytest.raises(ValueError):
+        restore_checkpoint(path, {"a": jnp.ones(4), "b": jnp.ones(2)})
+
+
+def test_serving_state_roundtrip(tmp_path):
+    path = str(tmp_path / "sstate")
+    assign = np.arange(8).reshape(2, 4)
+    B = np.ones((2, 4), np.int64)
+    A = np.ones((2, 2, 4), np.int64)
+    save_serving_state(path, placement_assign=assign, profiler_B=B,
+                       profiler_A=A, scheduler_comp={0: 1.5, 1: 0.0})
+    tree, comp = restore_serving_state(path)
+    np.testing.assert_array_equal(np.asarray(tree["placement_assign"]),
+                                  assign)
+    assert comp == {0: 1.5, 1: 0.0}
+
+
+def test_health_excludes_and_rejoins():
+    table = TraceTable([0, 1])
+    sched = GimbalScheduler(table)
+    table.report(EngineTrace(0), now=0.0)
+    table.report(EngineTrace(1), now=0.0)
+    moved = {}
+    mon = EngineHealthMonitor(
+        table, sched, HealthConfig(trace_timeout_s=1.0),
+        redispatch=lambda e: moved.setdefault(e, 4))
+    table.report(EngineTrace(0), now=10.0)    # engine 1 silent
+    assert mon.check(now=10.0) == [1]
+    assert moved == {1: 4}
+    picks = {sched.select_engine(10, 10.0) for _ in range(4)}
+    assert picks == {0}
+    table.report(EngineTrace(1), now=11.0)    # recovery
+    mon.check(now=11.0)
+    picks = {sched.select_engine(10, 11.0) for _ in range(4)}
+    assert 1 in picks
+
+
+def test_elastic_scale_up_down():
+    table = TraceTable([0, 1])
+    sched = GimbalScheduler(table)
+    ec = ElasticController(table, sched)
+    ec.scale_up(2)
+    assert 2 in table.engine_ids
+    # new engine has no trace -> fallback ordered dispatch still works
+    assert sched.select_engine(10, 0.0) in (0, 1, 2)
+    ec.scale_down(0, drain=lambda e: 0)
+    assert 0 not in table.engine_ids
+
+
+def test_gradient_compression_bounded_error_and_trains():
+    g = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(64, 64)),
+                          jnp.float32)}
+    q = compress_grads_int8(g)
+    err = float(jnp.max(jnp.abs(q["w"] - g["w"])))
+    scale = float(jnp.max(jnp.abs(g["w"]))) / 127.0
+    assert err <= scale * 0.51 + 1e-6   # half-ulp of the int8 grid
+
+    cfg = get_smoke_config("qwen3-8b")
+    fns = build_model(cfg)
+    params = fns.init(KEY)
+    step = jax.jit(make_train_step(lambda p, b: fns.loss(p, b),
+                                   AdamWConfig(lr=1e-3),
+                                   grad_compression="int8"))
+    state = make_train_state(params, AdamWConfig(lr=1e-3))
+    toks = jax.random.randint(KEY, (2, 16 + 1), 0, cfg.vocab_size)
+    batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    losses = []
+    for _ in range(8):
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]       # still optimizes under compression
+
+
+def test_int8_optimizer_moments_train():
+    cfg = get_smoke_config("gemma2-2b")
+    fns = build_model(cfg)
+    params = fns.init(KEY)
+    ocfg = AdamWConfig(lr=1e-3, moment_dtype="int8")
+    step = jax.jit(make_train_step(lambda p, b: fns.loss(p, b), ocfg))
+    state = make_train_state(params, ocfg)
+    toks = jax.random.randint(KEY, (2, 16 + 1), 0, cfg.vocab_size)
+    batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    losses = []
+    for _ in range(8):
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    assert np.isfinite(losses).all() and losses[-1] < losses[0]

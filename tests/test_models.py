@@ -1,0 +1,149 @@
+"""Per-arch smoke tests (reduced configs) + model-level invariants.
+
+Every assigned architecture instantiates its reduced family config and runs
+one forward/train step on CPU asserting output shapes and no NaNs; decode
+after prefill must equal full prefill (the serving-consistency invariant).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config, list_archs
+from repro.models import build_model
+
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 24
+
+
+def _batch(cfg, s=S, with_lengths=False):
+    toks = jax.random.randint(KEY, (B, s), 0, cfg.vocab_size)
+    b = {}
+    if cfg.family == "encdec":
+        b["embeddings"] = jax.random.normal(KEY, (B, s, cfg.d_model),
+                                            jnp.bfloat16)
+        b["tokens"] = toks
+    elif cfg.input_mode == "embeddings":
+        b["embeddings"] = jax.random.normal(KEY, (B, s, cfg.d_model),
+                                            jnp.bfloat16)
+    else:
+        b["tokens"] = toks
+    if with_lengths:
+        b["lengths"] = jnp.full((B,), s, jnp.int32)
+    else:
+        b["labels"] = toks
+    return b
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_smoke_train_step(arch):
+    cfg = get_smoke_config(arch)
+    fns = build_model(cfg)
+    params = fns.init(KEY)
+    loss, metrics = jax.jit(fns.loss)(params, _batch(cfg))
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss))
+    assert bool(jnp.isfinite(metrics["ce"]))
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_smoke_prefill_shapes_and_finite(arch):
+    cfg = get_smoke_config(arch)
+    fns = build_model(cfg)
+    params = fns.init(KEY)
+    cache = fns.init_cache(B, 40)
+    logits, cache2, stats = jax.jit(fns.prefill)(
+        params, _batch(cfg, with_lengths=True), cache)
+    assert logits.shape == (B, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+    if cfg.moe.enabled:
+        assert stats is not None and "expert_counts" in stats
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_decode_matches_full_prefill(arch):
+    cfg = get_smoke_config(arch)
+    if cfg.moe.enabled:  # dropless capacity so outputs are deterministic
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+            cfg.moe, capacity_factor=float(cfg.moe.n_experts)))
+    if cfg.input_mode == "embeddings" and cfg.family != "encdec":
+        pytest.skip("vlm prefill consumes embeddings; covered separately")
+    fns = build_model(cfg)
+    params = fns.init(KEY)
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+
+    def pf(s):
+        b = _batch(cfg, s=S, with_lengths=True) if cfg.family == "encdec" \
+            else {}
+        if cfg.family == "encdec":
+            b["tokens"] = toks[:, :s]
+            b["lengths"] = jnp.full((B,), s, jnp.int32)
+        else:
+            b = {"tokens": toks[:, :s],
+                 "lengths": jnp.full((B,), s, jnp.int32)}
+        return b
+
+    full, _, _ = jax.jit(fns.prefill)(params, pf(S), fns.init_cache(B, 40))
+    _, cache, _ = jax.jit(fns.prefill)(params, pf(S - 1),
+                                       fns.init_cache(B, 40))
+    kw = {}
+    if cfg.family == "encdec":
+        kw["enc_lengths"] = jnp.full((B,), S, jnp.int32)
+    dec, _, _ = jax.jit(lambda p, t, c, l: fns.decode(p, t, c, l, **kw))(
+        params, toks[:, S - 1], cache, jnp.full((B,), S - 1, jnp.int32))
+    np.testing.assert_allclose(
+        np.asarray(full, np.float32), np.asarray(dec, np.float32),
+        rtol=2e-2, atol=2e-2)
+
+
+def test_vlm_decode_after_embedding_prefill():
+    cfg = get_smoke_config("llava-next-34b")
+    fns = build_model(cfg)
+    params = fns.init(KEY)
+    cache = fns.init_cache(B, 40)
+    batch = {"embeddings": jax.random.normal(KEY, (B, S, cfg.d_model),
+                                             jnp.bfloat16),
+             "lengths": jnp.full((B,), S, jnp.int32)}
+    _, cache, _ = jax.jit(fns.prefill)(params, batch, cache)
+    tok = jnp.zeros((B,), jnp.int32)
+    logits, _, _ = jax.jit(fns.decode)(params, tok, cache,
+                                       jnp.full((B,), S, jnp.int32))
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+
+def test_sliding_window_restricts_attention():
+    """A token far outside every local window must not affect windowed-layer
+    outputs: gemma2 alternates local/global so full equality is not expected,
+    but ring-buffer decode must stay finite and consistent in shape."""
+    cfg = get_smoke_config("gemma2-2b")
+    fns = build_model(cfg)
+    params = fns.init(KEY)
+    toks = jax.random.randint(KEY, (B, 20), 0, cfg.vocab_size)
+    _, cache, _ = jax.jit(fns.prefill)(
+        params, {"tokens": toks, "lengths": jnp.full((B,), 20, jnp.int32)},
+        fns.init_cache(B, 64))
+    lens = jnp.full((B,), 20, jnp.int32)
+    for i in range(3):
+        logits, cache, _ = jax.jit(fns.decode)(
+            params, jnp.full((B,), 5, jnp.int32), cache, lens + i)
+        assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+
+def test_int8_kv_cache_close_to_bf16():
+    cfg = get_smoke_config("qwen1.5-32b")
+    fns = build_model(cfg)
+    params = fns.init(KEY)
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    outs = {}
+    for kvd in ("bfloat16", "int8"):
+        cache = fns.init_cache(B, 40, kv_dtype=kvd)
+        _, cache, _ = jax.jit(fns.prefill)(
+            params, {"tokens": toks[:, :S - 1],
+                     "lengths": jnp.full((B,), S - 1, jnp.int32)}, cache)
+        lg, _, _ = jax.jit(fns.decode)(params, toks[:, S - 1], cache,
+                                       jnp.full((B,), S - 1, jnp.int32))
+        outs[kvd] = np.asarray(lg, np.float32)
+    scale = np.abs(outs["bfloat16"]).max()
+    assert np.abs(outs["int8"] - outs["bfloat16"]).max() < 0.05 * scale + 0.05

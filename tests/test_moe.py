@@ -1,0 +1,94 @@
+"""MoE layer: dispatch-vs-oracle equivalence, placement/migration identities,
+and routing-statistics correctness (property-based)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_smoke_config
+from repro.models import moe as moe_mod
+
+KEY = jax.random.PRNGKey(1)
+
+
+def _cfg(top_k=2, cf=8.0):
+    cfg = get_smoke_config("qwen3-moe-30b-a3b")
+    return dataclasses.replace(cfg, moe=dataclasses.replace(
+        cfg.moe, top_k=top_k, capacity_factor=cf))
+
+
+def test_dispatch_matches_dropless_oracle():
+    cfg = _cfg(cf=float(8))   # capacity >= everything -> no drops
+    params = moe_mod.init_moe(KEY, cfg)
+    x = jax.random.normal(KEY, (2, 16, cfg.d_model), jnp.bfloat16)
+    placement = jnp.arange(cfg.moe.n_experts, dtype=jnp.int32)
+    y, stats = jax.jit(lambda p, x: moe_mod.moe_layer(p, cfg, x, placement))(
+        params, x)
+    y_ref = jax.jit(lambda p, x: moe_mod.moe_layer_ref(p, cfg, x, placement))(
+        params, x)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_placement_permutation_invariance():
+    """Permuting expert placement while permuting the physical weights the
+    same way must leave outputs unchanged (the migration correctness law)."""
+    cfg = _cfg()
+    params = moe_mod.init_moe(KEY, cfg)
+    E = cfg.moe.n_experts
+    x = jax.random.normal(KEY, (2, 16, cfg.d_model), jnp.bfloat16)
+    ident = jnp.arange(E, dtype=jnp.int32)
+    perm = jnp.asarray(np.random.default_rng(0).permutation(E), jnp.int32)
+
+    y0, _ = moe_mod.moe_layer(params, cfg, x, ident)
+    moved = moe_mod.migrate_expert_weights(params, ident, perm)
+    y1, _ = moe_mod.moe_layer(moved, cfg, x, perm)
+    np.testing.assert_allclose(np.asarray(y0, np.float32),
+                               np.asarray(y1, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_capacity_drops_tokens_not_crash():
+    cfg = _cfg(cf=0.25)       # force drops
+    params = moe_mod.init_moe(KEY, cfg)
+    x = jax.random.normal(KEY, (2, 32, cfg.d_model), jnp.bfloat16)
+    placement = jnp.arange(cfg.moe.n_experts, dtype=jnp.int32)
+    y, _ = moe_mod.moe_layer(params, cfg, x, placement)
+    assert bool(jnp.isfinite(y.astype(jnp.float32)).all())
+
+
+def test_statistics_match_routing():
+    cfg = _cfg()
+    params = moe_mod.init_moe(KEY, cfg)
+    B, S = 3, 16
+    x = jax.random.normal(KEY, (B, S, cfg.d_model), jnp.bfloat16)
+    placement = jnp.arange(cfg.moe.n_experts, dtype=jnp.int32)
+    src = jnp.asarray([0, 1, 1], jnp.int32)
+    _, stats = moe_mod.moe_layer(params, cfg, x, placement, source_ids=src,
+                                 n_sources=2)
+    counts = np.asarray(stats["expert_counts"])
+    a = np.asarray(stats["source_expert"])
+    assert counts.sum() == B * S * cfg.moe.top_k
+    np.testing.assert_array_equal(a.sum(axis=0), counts)  # B is A's marginal
+    assert a[0].sum() == S * cfg.moe.top_k                # row 0 -> source 0
+    assert a[1].sum() == 2 * S * cfg.moe.top_k
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 4))
+@settings(max_examples=10, deadline=None)
+def test_property_gates_sum_to_one(seed, k):
+    cfg = _cfg(top_k=k)
+    params = moe_mod.init_moe(jax.random.PRNGKey(seed), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (30, cfg.d_model),
+                          jnp.bfloat16)
+    gates, idx, probs = moe_mod.route(params, cfg, x)
+    np.testing.assert_allclose(np.asarray(gates.sum(-1)), 1.0, atol=1e-5)
+    assert int(idx.min()) >= 0 and int(idx.max()) < cfg.moe.n_experts
+    # top-k ids are distinct per token
+    ids = np.asarray(idx)
+    for row in ids:
+        assert len(set(row.tolist())) == k

@@ -1,0 +1,96 @@
+"""Sharding policy + HLO analysis unit tests (no big compiles)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, get_shape
+from repro.distributed.sharding import (make_param_specs, make_policy)
+from repro.launch.hlo_analysis import (_shape_bytes,
+                                       collective_bytes_from_text,
+                                       total_collective_bytes)
+from repro.models import build_model
+
+
+@pytest.fixture(scope="module")
+def mesh8():
+    if len(jax.devices()) >= 8:
+        return jax.make_mesh((2, 4), ("data", "model"))
+    pytest.skip("needs >=8 devices (run under REPRO_DRYRUN_DEVICES)")
+
+
+def _abstract_params(arch):
+    cfg = get_config(arch)
+    fns = build_model(cfg)
+    return cfg, jax.eval_shape(lambda: fns.init(jax.random.PRNGKey(0)))
+
+
+def test_param_specs_cover_tree_and_rank():
+    if len(jax.devices()) < 8:
+        pytest.skip("single-device session")
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    cfg, params = _abstract_params("qwen3-moe-30b-a3b")
+    pol = make_policy(cfg, get_shape("train_4k"), mesh, "train")
+    specs = make_param_specs(params, cfg, pol)
+    n = 0
+    for leaf, spec in zip(jax.tree.leaves(params),
+                          jax.tree.leaves(
+                              specs, is_leaf=lambda x: isinstance(x, P))):
+        assert isinstance(spec, P)
+        assert len(spec) <= leaf.ndim
+        # every sharded dim divides
+        for dim, s in zip(leaf.shape, tuple(spec) + (None,) * leaf.ndim):
+            if s is None:
+                continue
+            axes = (s,) if isinstance(s, str) else tuple(s)
+            size = int(np.prod([mesh.shape[a] for a in axes]))
+            assert dim % size == 0, (spec, leaf.shape)
+        n += 1
+    assert n > 10
+
+
+def test_policy_modes():
+    if len(jax.devices()) < 8:
+        pytest.skip("single-device session")
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    cfg = get_config("qwen3-moe-30b-a3b")
+    train = make_policy(cfg, get_shape("train_4k"), mesh, "train")
+    assert train.fsdp_axes == ("data",)
+    assert train.batch_axes == ("data",)
+    decode = make_policy(cfg, get_shape("decode_32k"), mesh, "serve")
+    assert decode.kv_split > 1 and "model" in decode.kv_split_axes
+    assert decode.fsdp_axes == ()
+    long = make_policy(cfg, get_shape("long_500k"), mesh, "serve")
+    assert long.batch_axes == ()           # B=1: no batch parallelism
+    assert set(long.kv_split_axes) == {"data", "model"}
+
+
+# ---------------------------------------------------------------- HLO parse
+def test_shape_bytes_parser():
+    assert _shape_bytes("f32[16,32]{1,0}") == 16 * 32 * 4
+    assert _shape_bytes("bf16[8]{0}") == 16
+    assert _shape_bytes("(f32[4,4]{1,0}, s8[10]{0})") == 64 + 10
+    assert _shape_bytes("pred[]") == 1
+
+
+def test_collective_parser_counts_ops():
+    hlo = """
+ENTRY %main (p: f32[16,32]) -> f32[64,16] {
+  %p = f32[16,32]{1,0} parameter(0)
+  %ag = f32[64,32]{1,0} all-gather(%p), dimensions={0}
+  %ar = f32[64,32]{1,0} all-reduce(%ag), to_apply=%add
+  %a2a = f32[64,32]{1,0} all-to-all(%ar), dimensions={0}
+  %cp = f32[64,32]{1,0} collective-permute(%a2a)
+  %ags = f32[64,32]{1,0} all-gather-start(%cp), dimensions={0}
+  %agd = f32[64,32]{1,0} all-gather-done(%ags)
+  ROOT %dot = f32[64,16]{1,0} dot(%agd, %agd)
+}
+"""
+    out = collective_bytes_from_text(hlo)
+    assert out["all-gather"]["count"] == 2      # ag + ag-start (done skipped)
+    assert out["all-reduce"]["count"] == 1
+    assert out["all-to-all"]["count"] == 1
+    assert out["collective-permute"]["count"] == 1
+    per = 64 * 32 * 4
+    assert total_collective_bytes(out) == 5 * per
