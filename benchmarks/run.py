@@ -2,9 +2,16 @@
 
 Prints ``name,us_per_call,derived`` CSV lines. Set REPRO_BENCH_FAST=1 for a
 reduced grid (used by CI-style smoke runs).
+
+``--smoke`` runs only the MoE dispatch benchmark on the reduced grid
+(interpret mode, CPU, <60s) and writes
+``experiments/bench/BENCH_moe_dispatch.json`` — the perf-trajectory
+tracking entry point for CI.
 """
 from __future__ import annotations
 
+import argparse
+import os
 import sys
 import traceback
 
@@ -17,14 +24,27 @@ MODULES = [
     "benchmarks.fig13_collection_overhead",
     "benchmarks.fig11_ablation",
     "benchmarks.fig9_end_to_end",
+    "benchmarks.fig_ragged_dispatch",
     "benchmarks.roofline_table",
 ]
 
+SMOKE_MODULES = ["benchmarks.fig_ragged_dispatch"]
+
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI mode: dispatch benchmark only, reduced "
+                         "grid, interpret mode on CPU")
+    args = ap.parse_args()
+    modules = MODULES
+    if args.smoke:
+        os.environ["REPRO_BENCH_FAST"] = "1"   # before benchmarks.common
+        modules = SMOKE_MODULES
+
     print("name,us_per_call,derived")
     failures = 0
-    for mod_name in MODULES:
+    for mod_name in modules:
         try:
             mod = __import__(mod_name, fromlist=["run"])
             mod.run()

@@ -83,6 +83,13 @@ class ShardingPolicy:
             return self.cs(t, self.batch_axes or None, None, None)
         return t
 
+    def shard_sorted_rows(self, t):
+        # (Np, D) ragged-dispatch sorted token buffer: rows stay on the DP
+        # axes (the sort itself is the a2a-equivalent layout change)
+        if t.ndim == 2:
+            return self.cs(t, self.batch_axes or None, None)
+        return t
+
     def shard_expert_ffn(self, h):
         # (E, C, F): optionally TP the expert FFN over data (huge MoE).
         # Row-parallel (F sharded) reduces outputs; disabling it makes XLA

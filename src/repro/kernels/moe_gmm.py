@@ -1,9 +1,21 @@
-"""Grouped expert matmul (MoE expert FFN hot spot).
+"""Grouped expert matmuls (MoE expert FFN hot spot).
 
-Computes y[e] = x[e] @ w[e] for every expert buffer — the batched-expert
-einsum at the heart of the MoE layer. Blocked for the MXU: grid
-(E, C/Cb, F/Fb, D/Db) with a VMEM fp32 accumulator tile; block shapes are
-multiples of (8, 128) so the matmul dims stay hardware-aligned.
+Two formulations:
+
+* ``moe_gmm`` — the capacity-padded baseline: y[e] = x[e] @ w[e] over an
+  ``(E, C, D)`` buffer, every capacity slot matmul'd (padding included).
+  Blocked for the MXU: grid (E, C/Cb, F/Fb, D/Db) with a VMEM fp32
+  accumulator tile. Non-block-divisible dims are padded up to the block
+  multiple and the result sliced back.
+
+* ``moe_gmm_ragged`` — the group-sized ragged GMM: x is a single
+  ``(Np, D)`` buffer of tokens sorted by expert with block-aligned group
+  starts (see ``kernels/moe_dispatch.ragged_dispatch``). The grid runs over
+  row tiles only; per-group row offsets/sizes sit in SMEM (scalar
+  prefetch), each row tile reads exactly the one weight block of its owning
+  expert, tiles past the last real group (and pad-only boundary tiles) are
+  ``@pl.when``-skipped, and partial boundary tiles are iota-masked. Issued
+  FLOPs scale with actual tokens-per-expert, not E*C padding.
 """
 from __future__ import annotations
 
@@ -12,6 +24,11 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _round_up(n: int, b: int) -> int:
+    return -(-n // b) * b
 
 
 def _kernel(x_ref, w_ref, o_ref, *, n_d):
@@ -30,15 +47,23 @@ def _kernel(x_ref, w_ref, o_ref, *, n_d):
 
 def moe_gmm(x, w, *, c_block: int = 128, f_block: int = 128,
             d_block: int = 256, interpret: bool = False):
-    """x: (E, C, D), w: (E, D, F) -> (E, C, F) fp32-accumulated."""
+    """x: (E, C, D), w: (E, D, F) -> (E, C, F) fp32-accumulated.
+
+    Odd shapes are handled by zero-padding C/D/F up to the block multiple
+    (zero rows/cols contribute nothing to the accumulation) and slicing the
+    result back to (E, C, F).
+    """
     E, C, D = x.shape
     _, _, F = w.shape
     cb, fb, db = min(c_block, C), min(f_block, F), min(d_block, D)
-    assert C % cb == 0 and F % fb == 0 and D % db == 0, \
-        f"blocks must divide dims: C{C}%{cb} F{F}%{fb} D{D}%{db}"
-    grid = (E, C // cb, F // fb, D // db)
-    kernel = functools.partial(_kernel, n_d=D // db)
-    return pl.pallas_call(
+    Cp, Fp, Dp = _round_up(C, cb), _round_up(F, fb), _round_up(D, db)
+    if (Cp, Dp) != (C, D):
+        x = jnp.pad(x, ((0, 0), (0, Cp - C), (0, Dp - D)))
+    if (Dp, Fp) != (D, F):
+        w = jnp.pad(w, ((0, 0), (0, Dp - D), (0, Fp - F)))
+    grid = (E, Cp // cb, Fp // fb, Dp // db)
+    kernel = functools.partial(_kernel, n_d=Dp // db)
+    y = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
@@ -46,6 +71,81 @@ def moe_gmm(x, w, *, c_block: int = 128, f_block: int = 128,
             pl.BlockSpec((1, db, fb), lambda e, c, f, d: (e, d, f)),
         ],
         out_specs=pl.BlockSpec((1, cb, fb), lambda e, c, f, d: (e, c, f)),
-        out_shape=jax.ShapeDtypeStruct((E, C, F), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((E, Cp, Fp), jnp.float32),
         interpret=interpret,
     )(x, w)
+    if (Cp, Fp) != (C, F):
+        y = y[:, :C, :F]
+    return y
+
+
+def _ragged_kernel(tile_e_ref, sizes_ref, poff_ref, x_ref, w_ref, o_ref, *,
+                   n_block):
+    n, d = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(d == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    e = tile_e_ref[n]
+    row0 = n * n_block
+    n_groups = sizes_ref.shape[0]
+    used = poff_ref[n_groups]            # rows past this are dead tail
+    # skip tiles wholly outside any group's real row range: past the last
+    # group, or entirely inside the owning group's alignment padding
+    @pl.when((row0 < used) & (row0 < poff_ref[e] + sizes_ref[e]))
+    def _acc():
+        # boundary tiles: mask rows past the group's real size
+        local = (row0 - poff_ref[e]
+                 + jax.lax.broadcasted_iota(jnp.int32, (n_block, 1), 0))
+        keep = local < sizes_ref[e]
+        x = jnp.where(keep, x_ref[...], 0)
+        o_ref[...] += jax.lax.dot_general(
+            x, w_ref[0], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+def moe_gmm_ragged(x, w, tile_expert, group_sizes, padded_offsets, *,
+                   n_block: int, f_block: int = 128, d_block: int = 256,
+                   interpret: bool = False):
+    """Group-sized ragged GMM: x (Np, D) sorted-by-expert block-aligned rows,
+    w (E, D, F), -> (Np, F) fp32.
+
+    tile_expert (Np//n_block,) int32: owning expert per row tile;
+    group_sizes (E,) int32: real rows per expert;
+    padded_offsets (E+1,) int32: block-aligned group starts (see
+    kernels/moe_dispatch). All three ride in SMEM via scalar prefetch so
+    the weight BlockSpec can select each tile's expert block directly.
+    """
+    Np, D = x.shape
+    E, _, F = w.shape
+    nb = n_block
+    assert Np % nb == 0, f"rows {Np} not aligned to n_block {nb}"
+    fb, db = min(f_block, F), min(d_block, D)
+    Fp, Dp = _round_up(F, fb), _round_up(D, db)
+    if Dp != D:
+        x = jnp.pad(x, ((0, 0), (0, Dp - D)))
+    if (Dp, Fp) != (D, F):
+        w = jnp.pad(w, ((0, 0), (0, Dp - D), (0, Fp - F)))
+    grid = (Np // nb, Fp // fb, Dp // db)
+    kernel = functools.partial(_ragged_kernel, n_block=nb)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((nb, db), lambda n, f, d, te, sz, po: (n, d)),
+            pl.BlockSpec((1, db, fb), lambda n, f, d, te, sz, po:
+                         (te[n], d, f)),
+        ],
+        out_specs=pl.BlockSpec((nb, fb), lambda n, f, d, te, sz, po: (n, f)),
+    )
+    y = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Np, Fp), jnp.float32),
+        interpret=interpret,
+    )(tile_expert.astype(jnp.int32), group_sizes.astype(jnp.int32),
+      padded_offsets.astype(jnp.int32), x, w)
+    if Fp != F:
+        y = y[:, :F]
+    return y

@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from repro.kernels.flash_decode import flash_decode as _flash_decode
 from repro.kernels.moe_gmm import moe_gmm as _moe_gmm
+from repro.kernels.moe_gmm import moe_gmm_ragged as _moe_gmm_ragged
 from repro.kernels.source_expert_count import \
     source_expert_count as _source_expert_count
 
@@ -34,6 +35,14 @@ def source_expert_count(expert_idx, source_ids, *, n_experts: int,
 def moe_gmm(x, w):
     """Grouped expert matmul: (E, C, D) x (E, D, F) -> (E, C, F)."""
     return _moe_gmm(x, w, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("n_block",))
+def moe_gmm_ragged(x, w, tile_expert, group_sizes, padded_offsets, *,
+                   n_block: int):
+    """Group-sized ragged GMM over a sorted (Np, D) buffer -> (Np, F)."""
+    return _moe_gmm_ragged(x, w, tile_expert, group_sizes, padded_offsets,
+                           n_block=n_block, interpret=_interpret())
 
 
 @jax.jit

@@ -28,6 +28,21 @@ def moe_gmm_ref(x, w):
                       w.astype(jnp.float32))
 
 
+def moe_gmm_ragged_ref(x, w, group_sizes, padded_offsets):
+    """Ragged GMM oracle: row r of x belongs to the expert whose
+    block-aligned range [padded_offsets[e], padded_offsets[e+1]) contains r,
+    and is live iff it lies within the group's real size. Dead rows -> 0."""
+    Np, _ = x.shape
+    E = group_sizes.shape[0]
+    rows = jnp.arange(Np, dtype=jnp.int32)
+    e_of = jnp.clip(jnp.searchsorted(padded_offsets[1:], rows, side="right"),
+                    0, E - 1)
+    live = rows < padded_offsets[e_of] + group_sizes[e_of]
+    y = jnp.einsum("nd,ndf->nf", x.astype(jnp.float32),
+                   w[e_of].astype(jnp.float32))
+    return jnp.where(live[:, None], y, 0.0)
+
+
 def flash_decode_ref(q, k_cache, v_cache, k_pos, q_pos):
     """Masked softmax attention oracle. q (B, Hq, hd)."""
     B, Hq, hd = q.shape

@@ -25,41 +25,54 @@ CELLS = {
     ("qwen3-moe-30b-a3b", "prefill_32k"): [
         ("v0_baseline",
          {"decode_regroup": False, "dispatch_constraints": False,
-          "vmap_scatter": False}, None, False),
+          "vmap_scatter": False, "ragged_dispatch": False}, None, False),
         ("v1_dispatch_constraints",
          {"decode_regroup": False, "dispatch_constraints": True,
-          "vmap_scatter": False}, None, False),
+          "vmap_scatter": False, "ragged_dispatch": False}, None, False),
         ("v2_vmap_scatter",
          {"decode_regroup": False, "dispatch_constraints": True,
-          "vmap_scatter": True}, None, False),
+          "vmap_scatter": True, "ragged_dispatch": False}, None, False),
         ("v3_plus_cache_donation",
          {"decode_regroup": False, "dispatch_constraints": True,
-          "vmap_scatter": True}, None, True),
+          "vmap_scatter": True, "ragged_dispatch": False}, None, True),
+        ("v4_ragged_dispatch",
+         {"decode_regroup": False, "dispatch_constraints": True,
+          "vmap_scatter": True, "ragged_dispatch": True}, None, True),
     ],
     ("qwen3-moe-30b-a3b", "decode_32k"): [
         ("v0_baseline",
          {"decode_regroup": False, "dispatch_constraints": False,
-          "vmap_scatter": False}, None, False),
+          "vmap_scatter": False, "ragged_dispatch": False}, None, False),
         ("v1_single_group_dispatch",
          {"decode_regroup": True, "dispatch_constraints": False,
-          "vmap_scatter": False}, None, False),
+          "vmap_scatter": False, "ragged_dispatch": False}, None, False),
         ("v2_vmap_scatter",
          {"decode_regroup": True, "dispatch_constraints": True,
-          "vmap_scatter": True}, None, False),
+          "vmap_scatter": True, "ragged_dispatch": False}, None, False),
         ("v3_plus_cache_donation",
          {"decode_regroup": True, "dispatch_constraints": True,
-          "vmap_scatter": True}, None, True),
+          "vmap_scatter": True, "ragged_dispatch": False}, None, True),
+        ("v4_ragged_dispatch",
+         {"decode_regroup": True, "dispatch_constraints": True,
+          "vmap_scatter": True, "ragged_dispatch": True}, None, True),
     ],
     ("llama4-maverick-400b-a17b", "train_4k"): [
         ("v0_baseline_rowparallel",
          {"decode_regroup": True, "dispatch_constraints": True,
-          "vmap_scatter": False}, {"expert_rowparallel": True}, False),
+          "vmap_scatter": False, "ragged_dispatch": False},
+         {"expert_rowparallel": True}, False),
         ("v1_weight_gather",
          {"decode_regroup": True, "dispatch_constraints": True,
-          "vmap_scatter": False}, {"expert_rowparallel": False}, False),
+          "vmap_scatter": False, "ragged_dispatch": False},
+         {"expert_rowparallel": False}, False),
         ("v2_vmap_scatter",
          {"decode_regroup": True, "dispatch_constraints": True,
-          "vmap_scatter": True}, {"expert_rowparallel": False}, False),
+          "vmap_scatter": True, "ragged_dispatch": False},
+         {"expert_rowparallel": False}, False),
+        ("v3_ragged_dispatch",
+         {"decode_regroup": True, "dispatch_constraints": True,
+          "vmap_scatter": True, "ragged_dispatch": True},
+         {"expert_rowparallel": False}, False),
     ],
 }
 
@@ -103,7 +116,8 @@ def main():
         # restore optimized defaults
         moe_mod.PERF.update({"decode_regroup": True,
                              "dispatch_constraints": True,
-                             "vmap_scatter": True})
+                             "vmap_scatter": True,
+                             "ragged_dispatch": True})
 
 
 if __name__ == "__main__":

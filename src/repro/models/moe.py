@@ -23,6 +23,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.moe_dispatch import (pick_row_block, ragged_combine,
+                                        ragged_dispatch, ragged_gmm)
 from repro.models.layers import dense_init
 
 # §Perf toggles — flipped by launch/perf_run.py to measure the before/after
@@ -34,6 +36,10 @@ PERF = {
                                    # the partitioner keeps dispatch shard-local
                                    # (explicit batch indices force a global
                                    # scatter = full all-gather of updates)
+    "ragged_dispatch": True,       # iteration D1: sort-based dropless dispatch
+                                   # + group-sized ragged GMM — useful FLOPs
+                                   # ~= issued FLOPs, no capacity drops
+                                   # (EXPERIMENTS.md §Perf iteration D1)
 }
 
 
@@ -79,18 +85,83 @@ def expert_statistics(expert_idx, n_experts: int, source_ids=None,
     return stats
 
 
+def _ragged_moe_ffn(params, x, gates, logical_idx, placement, E, K, policy,
+                    src2d, n_sources: int, collect_stats: bool):
+    """Sort-based dropless expert FFN [§Perf iteration D1].
+
+    Pipeline: argsort physical ids -> per-expert group_sizes (bincount; this
+    IS the B[e] statistic, so stats collection rides the dispatch pass) ->
+    gather tokens into one contiguous block-aligned (Np, D) buffer ->
+    group-sized ragged GMM (Pallas off-policy, blocked-XLA under SPMD) ->
+    unsort + gate-weighted combine. No capacity, no drops, no trash row;
+    issued FLOPs scale with actual tokens-per-expert.
+    """
+    B, S, D = x.shape
+    T = B * S
+    x2d = x.reshape(T, D)
+    phys = placement[logical_idx].reshape(T, K)
+    nb = pick_row_block(T * K, E)
+    disp = ragged_dispatch(x2d, phys, E, row_block=nb)
+
+    stats = {}
+    if collect_stats:
+        # physical slot placement[l] holds logical expert l, so the logical
+        # load B[e] is a gather of the sort pass's bincount — zero extra work
+        stats["expert_counts"] = jnp.take(disp.group_sizes, placement)
+        if src2d is not None and n_sources > 0:
+            if policy is None:
+                # fused Pallas stats kernel on the sorted ids (same pass)
+                from repro.kernels import ops
+                lg = logical_idx.reshape(T * K)[disp.sort_idx] \
+                    .astype(jnp.int32)
+                ss = src2d.reshape(T)[disp.sort_idx // K].astype(jnp.int32)
+                _, a = ops.source_expert_count(
+                    lg[:, None], ss, n_experts=E, n_sources=n_sources)
+                stats["source_expert"] = a
+            else:
+                # shardable XLA scatter-add (same formulation as the
+                # padded path)
+                stats["source_expert"] = expert_statistics(
+                    logical_idx, E, src2d, n_sources)["source_expert"]
+
+    use_kernel = policy is None
+    xs = disp.xs
+    if policy is not None:
+        xs = policy.shard_sorted_rows(xs)
+    args = (disp.tile_expert, disp.group_sizes, disp.padded_offsets, nb,
+            use_kernel)
+    gate = ragged_gmm(xs, params["w_gate"], *args)
+    up = ragged_gmm(xs, params["w_up"], *args)
+    h = (jax.nn.silu(gate) * up).astype(x.dtype)
+    if policy is not None:
+        h = policy.shard_ffn_act(h)
+    ys = ragged_gmm(h, params["w_down"], *args)
+    if policy is not None:
+        ys = policy.shard_sorted_rows(ys)
+    y2d = ragged_combine(ys, disp.dest, gates.reshape(T, K))
+    return y2d.reshape(B, S, D).astype(x.dtype), stats
+
+
 def moe_layer(params, cfg, x, placement, *, source_ids=None, n_sources: int = 0,
               policy=None, collect_stats: bool = True,
-              capacity_factor: Optional[float] = None):
+              capacity_factor: Optional[float] = None,
+              ragged: Optional[bool] = None):
     """x: (B, S, D) -> (y (B, S, D), stats dict).
 
     placement: (E,) int32 logical->physical slot permutation.
     source_ids: (B,) int32 DP-source id per batch row (for A[s, e]).
+    ragged: override for PERF["ragged_dispatch"] (None = use the toggle).
 
-    Dispatch bookkeeping is **grouped per batch row** (GShard grouping): each
-    row computes its own capacity queue locally, so the one-hot cumsum is
-    O(S*K*E) per row instead of O(B*S*K*E) globally and stays shard-local on
-    the DP axes — matching the paper's per-DP-engine dispatch semantics.
+    Two dispatch formulations:
+
+    * **ragged** (default, [§Perf iteration D1]): sort-based dropless
+      dispatch + group-sized GMM — see ``_ragged_moe_ffn``.
+    * **padded** (the A/B baseline): dispatch bookkeeping **grouped per
+      batch row** (GShard grouping): each row computes its own capacity
+      queue locally, so the one-hot cumsum is O(S*K*E) per row instead of
+      O(B*S*K*E) globally and stays shard-local on the DP axes — matching
+      the paper's per-DP-engine dispatch semantics. Tokens past an expert's
+      capacity C are dropped.
     """
     m = cfg.moe
     B, S, D = x.shape
@@ -100,11 +171,20 @@ def moe_layer(params, cfg, x, placement, *, source_ids=None, n_sources: int = 0,
 
     gates, logical_idx, probs = route(params, cfg, x)   # (B,S,K),(B,S,K),(B,S,E)
 
+    use_ragged = PERF["ragged_dispatch"] if ragged is None else ragged
+    src = None
+    if source_ids is not None:
+        src = jnp.broadcast_to(source_ids[:, None], (B, S))
+
+    if use_ragged:
+        y, stats = _ragged_moe_ffn(params, x, gates, logical_idx, placement,
+                                   E, K, policy, src, n_sources,
+                                   collect_stats)
+        return _moe_epilogue(params, cfg, x, y, stats, gates, logical_idx,
+                             probs, B, S, E, K, policy)
+
     stats = {}
     if collect_stats:
-        src = None
-        if source_ids is not None:
-            src = jnp.broadcast_to(source_ids[:, None], (B, S))
         stats = expert_statistics(logical_idx, E, src, n_sources)
 
     # Decode (S == 1): per-row grouping would give every row its own
@@ -172,7 +252,17 @@ def moe_layer(params, cfg, x, placement, *, source_ids=None, n_sources: int = 0,
         ytok = ybuf[jnp.arange(B)[:, None], dest].reshape(B, S, K, D)
     y = jnp.sum(ytok * gates[..., None].astype(ytok.dtype), axis=2)
 
-    if m.n_shared_experts:
+    y, stats = _moe_epilogue(params, cfg, x, y, stats, gates, logical_idx,
+                             probs, B, S, E, K, policy)
+    if decode_regroup:
+        y = y.reshape(orig_B, 1, D)
+    return y, stats
+
+
+def _moe_epilogue(params, cfg, x, y, stats, gates, logical_idx, probs,
+                  B, S, E, K, policy=None):
+    """Shared-expert branch + router aux loss (both dispatch paths)."""
+    if cfg.moe.n_shared_experts:
         from repro.models.layers import mlp
         y = y + mlp(params["shared"], x, policy)
 
@@ -181,9 +271,6 @@ def moe_layer(params, cfg, x, placement, *, source_ids=None, n_sources: int = 0,
     frac = jnp.mean(jax.nn.one_hot(
         logical_idx.reshape(B * S, K), E, dtype=jnp.float32).sum(1), axis=0)
     stats["aux_loss"] = E * jnp.sum(probs_mean * frac)
-
-    if decode_regroup:
-        y = y.reshape(orig_B, 1, D)
     return y, stats
 
 

@@ -20,6 +20,7 @@ import numpy as np
 from repro.core.queue_policy import QueueConfig, order_queue
 from repro.core.traces import EngineTrace
 from repro.models import build_model
+from repro.models import moe as moe_mod
 from repro.models.transformer import identity_placement
 from repro.serving.kvcache import SlotAllocator
 from repro.serving.request import Request, RequestState
@@ -27,7 +28,8 @@ from repro.serving.request import Request, RequestState
 
 class RealModelEngine:
     def __init__(self, engine_id: int, cfg, params, *, max_slots: int = 8,
-                 max_len: int = 128, n_sources: int = 2, seed: int = 0):
+                 max_len: int = 128, n_sources: int = 2, seed: int = 0,
+                 ragged_dispatch: Optional[bool] = None):
         self.engine_id = engine_id
         self.cfg = cfg
         self.fns = build_model(cfg)
@@ -35,6 +37,13 @@ class RealModelEngine:
         self.max_slots = max_slots
         self.max_len = max_len
         self.n_sources = n_sources
+        # MoE dispatch mode for this engine's jitted fns: ragged (dropless
+        # sort-based, the default) vs capacity-padded. Captured at trace
+        # time via the PERF toggle, so per-engine A/B runs never leak into
+        # other engines' compiles.
+        self.ragged_dispatch = (moe_mod.PERF["ragged_dispatch"]
+                                if ragged_dispatch is None
+                                else ragged_dispatch)
         self.cache = self.fns.init_cache(max_slots, max_len)
         self.slots = SlotAllocator(max_slots)
         self.lengths = np.zeros(max_slots, np.int32)
@@ -46,6 +55,17 @@ class RealModelEngine:
         self.step_count = 0
         self.stats_log: List[Dict] = []
 
+        def _with_dispatch_mode(fn):
+            """Pin this engine's dispatch mode while jit traces ``fn``."""
+            def traced(*args, **kw):
+                prev = moe_mod.PERF["ragged_dispatch"]
+                moe_mod.PERF["ragged_dispatch"] = self.ragged_dispatch
+                try:
+                    return fn(*args, **kw)
+                finally:
+                    moe_mod.PERF["ragged_dispatch"] = prev
+            return traced
+
         def _decode(params, tokens, cache, lengths, placement):
             return self.fns.decode(params, tokens, cache, lengths,
                                    placement=placement,
@@ -54,7 +74,7 @@ class RealModelEngine:
                                    n_sources=n_sources,
                                    collect_stats=cfg.moe.enabled)
 
-        self._decode = jax.jit(_decode)
+        self._decode = jax.jit(_with_dispatch_mode(_decode))
 
         def _prefill(params, batch, cache, placement):
             return self.fns.prefill(
@@ -62,7 +82,7 @@ class RealModelEngine:
                 source_ids=jnp.full((1,), engine_id, jnp.int32),
                 n_sources=n_sources, collect_stats=cfg.moe.enabled)
 
-        self._prefill = jax.jit(_prefill)
+        self._prefill = jax.jit(_with_dispatch_mode(_prefill))
 
     # ---- admission -----------------------------------------------------
     def enqueue(self, req: Request, now: float) -> None:

@@ -45,6 +45,20 @@ def _quant(x, block):
     return q, scale[:, 0].astype(jnp.float32)
 
 
+def _quant_ceil(x, block):
+    """Absmax int8 for non-negative values, rounding UP: a nonzero entry
+    never quantizes to 0 (used for the sqrt second moment, where a collapse
+    to 0 would turn the Adam denominator into bare eps and diverge)."""
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % block
+    flat = jnp.pad(flat, (0, pad))
+    blk = flat.reshape(-1, block)
+    scale = jnp.max(blk, axis=1, keepdims=True) / 127.0
+    q = jnp.clip(jnp.ceil(blk / jnp.maximum(scale, 1e-12)), 0, 127) \
+        .astype(jnp.int8)
+    return q, scale[:, 0].astype(jnp.float32)
+
+
 def _dequant(q, scale, shape, block):
     flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
     n = 1
@@ -90,14 +104,20 @@ def apply_updates(params, grads, state: OptState, cfg: AdamWConfig):
         def upd(p, g, mq, ms, vq, vs):
             g = g.astype(jnp.float32) * clip
             m = _dequant(mq, ms, p.shape, cfg.block)
-            v = _dequant(vq, vs, p.shape, cfg.block)
+            # second moment is stored int8 in SQRT domain: absmax-int8 on raw
+            # v collapses small entries in blocks with large dynamic range to
+            # zero, so u = m / (sqrt(0) + eps) diverges after a few steps.
+            # sqrt halves the range and _quant_ceil keeps the denominator at
+            # or above the block's representable resolution.
+            r = _dequant(vq, vs, p.shape, cfg.block)
+            v = jnp.square(r)
             m = cfg.b1 * m + (1 - cfg.b1) * g
             v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
             u = (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps)
             u = u + cfg.weight_decay * p.astype(jnp.float32)
             newp = (p.astype(jnp.float32) - cfg.lr * u).astype(p.dtype)
             mq2, ms2 = _quant(m, cfg.block)
-            vq2, vs2 = _quant(v, cfg.block)
+            vq2, vs2 = _quant_ceil(jnp.sqrt(v), cfg.block)
             return newp, mq2, ms2, vq2, vs2
 
         out = jax.tree.map(upd, params, grads, state.mu, state.mu_scale,

@@ -1,0 +1,72 @@
+"""Tiny fallback for the ``hypothesis`` API used by this suite.
+
+On minimal installs (no hypothesis) the property tests still run as
+deterministic multi-example tests: each ``@given`` draws ``max_examples``
+pseudo-random samples from the declared strategies with a fixed seed, so
+collection never fails and the properties keep real (if weaker) coverage.
+Supports exactly the strategy surface the suite uses: integers, floats,
+lists, tuples.
+"""
+from __future__ import annotations
+
+
+import random
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng):
+        return self._draw(rng)
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy(
+            lambda rng: rng.uniform(float(min_value), float(max_value)))
+
+    @staticmethod
+    def tuples(*elems):
+        return _Strategy(lambda rng: tuple(e.example(rng) for e in elems))
+
+    @staticmethod
+    def lists(elem, min_size=0, max_size=10):
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            return [elem.example(rng) for _ in range(n)]
+        return _Strategy(draw)
+
+
+st = _Strategies()
+
+
+def settings(max_examples=20, deadline=None, **_kw):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strategies):
+    def deco(fn):
+        # NOTE: deliberately no functools.wraps — pytest must see a zero-arg
+        # signature, not the original one (it would treat the drawn
+        # parameters as fixtures)
+        def wrapper():
+            # honor @settings whether applied above or below @given
+            n = getattr(wrapper, "_max_examples",
+                        getattr(fn, "_max_examples", 20))
+            rng = random.Random(0)
+            for _ in range(n):
+                fn(*(s.example(rng) for s in strategies))
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper._max_examples = getattr(fn, "_max_examples", 20)
+        return wrapper
+    return deco

@@ -6,7 +6,10 @@ import pytest
 
 from repro.kernels import ops, ref
 from repro.kernels.flash_decode import flash_decode
-from repro.kernels.moe_gmm import moe_gmm
+from repro.kernels.moe_dispatch import (gmm_blocked_xla, padded_rows,
+                                        pick_row_block, ragged_combine,
+                                        ragged_dispatch)
+from repro.kernels.moe_gmm import moe_gmm, moe_gmm_ragged
 from repro.kernels.source_expert_count import source_expert_count
 
 RNG = np.random.default_rng(42)
@@ -42,6 +45,84 @@ def test_moe_gmm_sweep(E, C, D, F, dtype):
     tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
     np.testing.assert_allclose(np.asarray(y), np.asarray(y_r),
                                rtol=tol, atol=tol * 10)
+
+
+@pytest.mark.parametrize("E,C,D,F", [
+    (2, 37, 100, 130), (3, 5, 64, 96), (4, 128, 200, 72),
+])
+def test_moe_gmm_nondivisible_dims(E, C, D, F):
+    """Odd shapes auto-pad to the block multiple instead of asserting."""
+    x = jnp.asarray(RNG.normal(size=(E, C, D)), jnp.float32)
+    w = jnp.asarray(RNG.normal(size=(E, D, F)), jnp.float32)
+    y = moe_gmm(x, w, c_block=32, f_block=128, d_block=64, interpret=True)
+    assert y.shape == (E, C, F)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref.moe_gmm_ref(
+        x, w)), rtol=1e-5, atol=1e-4)
+
+
+def _skewed_ids(T, K, E, alpha, rng):
+    p = 1.0 / np.arange(1, E + 1) ** alpha
+    p /= p.sum()
+    g = rng.gumbel(size=(T, E)) + np.log(p)
+    return np.argpartition(-g, K, axis=1)[:, :K].astype(np.int32)
+
+
+@pytest.mark.parametrize("T,K,E,D,F,alpha", [
+    (64, 1, 8, 64, 128, 0.0),      # tiny, uniform
+    (200, 4, 16, 96, 160, 1.0),    # skewed, odd dims
+    (256, 8, 64, 128, 96, 1.4),    # heavy skew: many empty experts
+    (33, 2, 128, 72, 64, 2.0),     # E >> T*K: most groups empty
+])
+def test_moe_gmm_ragged_sweep(T, K, E, D, F, alpha):
+    rng = np.random.default_rng(7)
+    x2d = jnp.asarray(rng.normal(size=(T, D)), jnp.float32)
+    phys = jnp.asarray(_skewed_ids(T, K, E, alpha, rng))
+    nb = pick_row_block(T * K, E)
+    disp = jax.jit(
+        lambda x, p: ragged_dispatch(x, p, E, row_block=nb))(x2d, phys)
+    assert disp.xs.shape[0] == padded_rows(T * K, E, nb)
+    # group_sizes is the physical-expert bincount
+    np.testing.assert_array_equal(
+        np.asarray(disp.group_sizes),
+        np.bincount(np.asarray(phys).ravel(), minlength=E))
+
+    w = jnp.asarray(rng.normal(size=(E, D, F)), jnp.float32)
+    y = moe_gmm_ragged(disp.xs, w, disp.tile_expert, disp.group_sizes,
+                       disp.padded_offsets, n_block=nb, f_block=64,
+                       d_block=64, interpret=True)
+    y_ref = ref.moe_gmm_ragged_ref(disp.xs, w, disp.group_sizes,
+                                   disp.padded_offsets)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-3)
+    # XLA fallback agrees on live rows (dead rows are zero-input anyway)
+    y_xla = gmm_blocked_xla(disp.xs, w, disp.tile_expert, row_block=nb)
+    np.testing.assert_allclose(np.asarray(y_xla), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-3)
+
+    # combine(unsort) reproduces the per-token gated mixture exactly
+    gates = jnp.asarray(rng.normal(size=(T, K)), jnp.float32)
+    out = np.asarray(ragged_combine(y, disp.dest, gates))
+    xn, pn, gn, wn = (np.asarray(x2d), np.asarray(phys), np.asarray(gates),
+                      np.asarray(w))
+    expect = np.einsum("tk,tkf->tf", gn,
+                       np.einsum("td,tkdf->tkf", xn, wn[pn]))
+    np.testing.assert_allclose(out, expect, rtol=1e-4, atol=1e-2)
+
+
+def test_ragged_dispatch_dest_is_injective():
+    """Every (token, k) slot maps to a distinct live row of the sorted
+    buffer, and live rows carry the right token content."""
+    rng = np.random.default_rng(11)
+    T, K, E, D = 100, 3, 12, 16
+    x2d = jnp.asarray(rng.normal(size=(T, D)), jnp.float32)
+    phys = jnp.asarray(rng.integers(0, E, (T, K)), jnp.int32)
+    disp = ragged_dispatch(x2d, phys, E, row_block=8)
+    dest = np.asarray(disp.dest)
+    assert len(set(dest.tolist())) == T * K
+    xs = np.asarray(disp.xs)
+    for slot in (0, T * K // 2, T * K - 1):
+        np.testing.assert_array_equal(xs[dest[slot]],
+                                      np.asarray(x2d)[slot // K])
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

@@ -1,7 +1,10 @@
 """Gimbal core unit + property tests (Algorithm 1 & 2, placement, MINLP)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal installs: deterministic fallback shim
+    from _hypothesis_compat import given, settings, st
 
 from repro.core import (BaselineScheduler, EngineTrace, GimbalScheduler,
                         PlacementConfig, QueueConfig, SchedulerConfig,

@@ -1,7 +1,10 @@
 """Serving substrate: KV pool, engine continuous batching, end-to-end sim."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal installs: deterministic fallback shim
+    from _hypothesis_compat import given, settings, st
 
 from repro.serving import (BlockPool, DPEngine, EngineConfig, PAPER_SYSTEMS,
                            Request, RequestState, simulate)
