@@ -3,10 +3,11 @@
 Prints ``name,us_per_call,derived`` CSV lines. Set REPRO_BENCH_FAST=1 for a
 reduced grid (used by CI-style smoke runs).
 
-``--smoke`` runs only the MoE dispatch benchmark on the reduced grid
-(interpret mode, CPU, <60s) and writes
-``experiments/bench/BENCH_moe_dispatch.json`` — the perf-trajectory
-tracking entry point for CI.
+``--smoke`` runs the MoE dispatch benchmark and the paged-serving
+end-to-end bench on reduced grids (CPU, <15s total) and writes
+``experiments/bench/BENCH_moe_dispatch.json`` +
+``experiments/bench/BENCH_paged_serving.json`` — the perf-trajectory
+tracking entry points for CI.
 """
 from __future__ import annotations
 
@@ -25,10 +26,12 @@ MODULES = [
     "benchmarks.fig11_ablation",
     "benchmarks.fig9_end_to_end",
     "benchmarks.fig_ragged_dispatch",
+    "benchmarks.fig_paged_serving",
     "benchmarks.roofline_table",
 ]
 
-SMOKE_MODULES = ["benchmarks.fig_ragged_dispatch"]
+SMOKE_MODULES = ["benchmarks.fig_ragged_dispatch",
+                 "benchmarks.fig_paged_serving"]
 
 
 def main() -> None:

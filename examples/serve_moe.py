@@ -18,6 +18,8 @@ from repro.configs import get_smoke_config
 from repro.core import (CoordinatorConfig, GimbalCoordinator,
                         GimbalScheduler, TraceTable)
 from repro.models import build_model
+from repro.models.transformer import (identity_placement,
+                                      migrate_params_for_placement)
 from repro.serving.real_engine import RealModelEngine
 from repro.serving.request import Request, RequestState
 from repro.workloads import generate_trace
@@ -51,6 +53,7 @@ def main():
     pending = list(reqs)
     now = 0.0
     migrations = 0
+    cur_perms = np.asarray(identity_placement(cfg))
     while pending or any(e.has_work for e in engines):
         now = time.time() - t0
         # dispatch arrivals due by now (Algorithm 1 against live traces)
@@ -71,8 +74,14 @@ def main():
         migrated, dur = coord.maybe_rebalance(now)
         if migrated:
             migrations += 1
-            perms = coord.placement.permutations()
+            perms = np.asarray(coord.placement.permutations())
+            # adopting a placement MOVES the weights: permute the stacked
+            # expert params alongside the routing table
+            params = migrate_params_for_placement(params, cfg,
+                                                  cur_perms, perms)
+            cur_perms = perms
             for e in engines:
+                e.params = params
                 e.placement = perms
                 e.moe_pressure = coord.engine_moe_pressure(e.engine_id)
             print(f"[t={now:5.1f}s] expert migration #{migrations} "

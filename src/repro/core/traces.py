@@ -26,6 +26,9 @@ class EngineTrace:
                                             # load on this engine's EP ranks
     n_running: int = 0
     n_waiting: int = 0
+    n_stalled: int = 0                      # decode lanes stalled last step:
+                                            # KV growth failed even after
+                                            # preemption (hard KV pressure)
     timestamp: float = 0.0
 
     def copy(self) -> "EngineTrace":

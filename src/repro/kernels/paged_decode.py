@@ -1,0 +1,155 @@
+"""Paged flash-decode attention kernel (block-table KV, single-token decode).
+
+The KV cache lives in a physical page pool ``(n_pages, page_size, Hkv, hd)``
+shared by every request; each request owns a *block table* — the ordered list
+of page ids holding its context. The kernel extends ``flash_decode``'s
+running-softmax structure: grid (B, n_blocks) iterates a request's logical
+pages sequentially, the block table rides in SMEM via scalar prefetch so the
+K/V BlockSpec index maps fetch physical page ``bt[b, j]`` directly from HBM —
+no gather materialisation, working set one (page_size, Hkv, hd) tile.
+
+Conventions shared with ``serving/paged.py``:
+
+* page id 0 is the reserved garbage page — allocators never hand it out, and
+  masked/inactive writes land there;
+* unused block-table entries are 0 (valid index, masked by ``ctx_lens``);
+* ``ctx_lens[b]`` is the number of live tokens — rows with ``ctx_lens == 0``
+  produce a zero output vector.
+
+``paged_decode_xla`` is the gather-based fallback used on CPU and under SPMD
+partitioning (identical math, materialises the dense view).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(bt_ref, q_ref, k_ref, v_ref, ctx_ref, o_ref,
+            m_scr, l_scr, acc_scr, *, scale, page_size, n_blocks):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]                                  # (Hq, hd)
+    k = k_ref[0]                                  # (ps, Hkv, hd)
+    v = v_ref[0]
+    ctx = ctx_ref[0, 0]                           # scalar: live tokens
+
+    Hq, hd = q.shape
+    ps, Hkv, _ = k.shape
+    G = Hq // Hkv
+    qg = q.reshape(Hkv, G, hd)
+
+    # logical positions covered by this page; mask dead tail + garbage pages
+    kpos = j * page_size + jax.lax.broadcasted_iota(jnp.int32, (ps,), 0)
+    valid = kpos < ctx
+
+    s = jnp.einsum("kgd,lkd->kgl", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale      # (Hkv, G, ps)
+    s = jnp.where(valid[None, None, :], s, NEG_INF)
+
+    m_prev = m_scr[...]                                # (Hkv, G)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    p = jnp.where(valid[None, None, :], p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_scr[...] * corr + jnp.sum(p, axis=-1)
+    acc_scr[...] = acc_scr[...] * corr[..., None] + jnp.einsum(
+        "kgl,lkd->kgd", p, v.astype(jnp.float32))
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(j == n_blocks - 1)
+    def _finish():
+        out = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)[..., None]
+        o_ref[0] = out.reshape(Hq, hd).astype(o_ref.dtype)
+
+
+def paged_decode_pallas(q, k_pages, v_pages, block_tables, ctx_lens, *,
+                        interpret: bool = False):
+    """q (B, Hq, hd); pages (P, ps, Hkv, hd); block_tables (B, NB) int32
+    physical page ids (0-filled past the context); ctx_lens (B,) int32."""
+    B, Hq, hd = q.shape
+    P, ps, Hkv, _ = k_pages.shape
+    _, NB = block_tables.shape
+    scale = 1.0 / np.sqrt(hd)
+    G = Hq // Hkv
+    bt = block_tables.astype(jnp.int32)
+
+    kernel = functools.partial(_kernel, scale=scale, page_size=ps,
+                               n_blocks=NB)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,                    # the block table
+        grid=(B, NB),
+        in_specs=[
+            pl.BlockSpec((1, Hq, hd), lambda b, j, bt: (b, 0, 0)),
+            pl.BlockSpec((1, ps, Hkv, hd),
+                         lambda b, j, bt: (bt[b, j], 0, 0, 0)),
+            pl.BlockSpec((1, ps, Hkv, hd),
+                         lambda b, j, bt: (bt[b, j], 0, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b, j, bt: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Hq, hd), lambda b, j, bt: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Hkv, G), jnp.float32),        # running max m
+            pltpu.VMEM((Hkv, G), jnp.float32),        # running sum l
+            pltpu.VMEM((Hkv, G, hd), jnp.float32),    # output accumulator
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hq, hd), q.dtype),
+        interpret=interpret,
+    )(bt, q, k_pages, v_pages, ctx_lens[:, None].astype(jnp.int32))
+
+
+def paged_decode_xla(q, k_pages, v_pages, block_tables, ctx_lens):
+    """Gather fallback: materialise each request's dense KV view, then do the
+    masked-softmax attention in fp32 (identical math to the kernel)."""
+    B, Hq, hd = q.shape
+    P, ps, Hkv, _ = k_pages.shape
+    _, NB = block_tables.shape
+    L = NB * ps
+    bt = block_tables.astype(jnp.int32)
+    kd = k_pages[bt].reshape(B, L, Hkv, hd).astype(jnp.float32)
+    vd = v_pages[bt].reshape(B, L, Hkv, hd).astype(jnp.float32)
+    kpos = jnp.arange(L, dtype=jnp.int32)[None]        # (1, L)
+    valid = kpos < ctx_lens[:, None]                   # (B, L)
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgd,blkd->bkgl", qg, kd) / np.sqrt(hd)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)                    # (B, Hkv, G, 1)
+    p = jnp.where(valid[:, None, None, :], jnp.exp(s - m), 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)                    # (B, Hkv, G, 1)
+    acc = jnp.einsum("bkgl,blkd->bkgd", p, vd)                # (B, Hkv, G, hd)
+    out = acc / jnp.maximum(l, 1e-30)
+    return out.reshape(B, Hq, hd).astype(q.dtype)
+
+
+def paged_decode(q, k_pages, v_pages, block_tables, ctx_lens, *,
+                 backend: str = "auto", interpret: bool = False):
+    """Block-table flash decode. backend: auto | pallas | xla.
+
+    ``auto`` picks the Pallas kernel on TPU and the XLA gather path
+    elsewhere (CPU, or when the caches are SPMD-partitioned arrays whose
+    page axis Pallas cannot follow)."""
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if backend == "pallas":
+        return paged_decode_pallas(q, k_pages, v_pages, block_tables,
+                                   ctx_lens, interpret=interpret)
+    return paged_decode_xla(q, k_pages, v_pages, block_tables, ctx_lens)

@@ -43,6 +43,23 @@ def moe_gmm_ragged_ref(x, w, group_sizes, padded_offsets):
     return jnp.where(live[:, None], y, 0.0)
 
 
+def paged_decode_ref(q, k_pages, v_pages, block_tables, ctx_lens):
+    """Paged decode oracle: gather the dense view from the block table, then
+    route through the trusted dense oracle. Rows with ctx_lens == 0 -> 0."""
+    B, Hq, hd = q.shape
+    _, ps, Hkv, _ = k_pages.shape
+    NB = block_tables.shape[1]
+    L = NB * ps
+    bt = block_tables.astype(jnp.int32)
+    kd = k_pages[bt].reshape(B, L, Hkv, hd)
+    vd = v_pages[bt].reshape(B, L, Hkv, hd)
+    pos = jnp.arange(L, dtype=jnp.int32)[None]
+    k_pos = jnp.where(pos < ctx_lens[:, None], pos, -1)
+    q_pos = jnp.maximum(ctx_lens - 1, 0).astype(jnp.int32)
+    out = flash_decode_ref(q, kd, vd, k_pos, q_pos)
+    return jnp.where((ctx_lens > 0)[:, None, None], out, 0.0).astype(q.dtype)
+
+
 def flash_decode_ref(q, k_cache, v_cache, k_pos, q_pos):
     """Masked softmax attention oracle. q (B, Hq, hd)."""
     B, Hq, hd = q.shape

@@ -23,6 +23,9 @@ def main():
     ap.add_argument("--mean-output", type=int, default=250)
     ap.add_argument("--real", action="store_true",
                     help="serve a real tiny MoE model end to end")
+    ap.add_argument("--paged", action="store_true",
+                    help="with --real: use the paged KV runtime "
+                         "(block-table decode, chunked prefill, preemption)")
     args = ap.parse_args()
 
     if args.real:
@@ -31,7 +34,10 @@ def main():
         root = os.path.dirname(os.path.dirname(os.path.dirname(
             os.path.dirname(os.path.abspath(__file__)))))
         sys.path.insert(0, root)   # examples/ lives at the repo root
-        from examples.serve_moe import main as real_main
+        if args.paged:
+            from examples.serve_moe_paged import main as real_main
+        else:
+            from examples.serve_moe import main as real_main
         real_main()
         return
 

@@ -72,21 +72,28 @@ def route(params, cfg, x2d):
 
 
 def expert_statistics(expert_idx, n_experts: int, source_ids=None,
-                      n_sources: int = 0):
-    """B[e] and A[s, e] by scatter-add (logical ids). expert_idx: (T, K)."""
+                      n_sources: int = 0, token_mask=None):
+    """B[e] and A[s, e] by scatter-add (logical ids). expert_idx: (T, K).
+    token_mask (broadcastable to expert_idx[..., 0]): tokens counted with
+    weight 0 are excluded — padding/inactive lanes must not register load."""
+    k = expert_idx.shape[-1]
     flat = expert_idx.reshape(-1)
-    counts = jnp.zeros((n_experts,), jnp.int32).at[flat].add(1)
+    if token_mask is None:
+        w = jnp.ones_like(flat)
+    else:
+        w = jnp.repeat(token_mask.reshape(-1).astype(jnp.int32), k)
+    counts = jnp.zeros((n_experts,), jnp.int32).at[flat].add(w)
     stats = {"expert_counts": counts}
     if source_ids is not None and n_sources > 0:
-        k = expert_idx.shape[-1]
         src = jnp.repeat(source_ids.reshape(-1), k)
         a = jnp.zeros((n_sources, n_experts), jnp.int32)
-        stats["source_expert"] = a.at[src, flat].add(1)
+        stats["source_expert"] = a.at[src, flat].add(w)
     return stats
 
 
 def _ragged_moe_ffn(params, x, gates, logical_idx, placement, E, K, policy,
-                    src2d, n_sources: int, collect_stats: bool):
+                    src2d, n_sources: int, collect_stats: bool,
+                    token_mask=None):
     """Sort-based dropless expert FFN [§Perf iteration D1].
 
     Pipeline: argsort physical ids -> per-expert group_sizes (bincount; this
@@ -105,9 +112,17 @@ def _ragged_moe_ffn(params, x, gates, logical_idx, placement, E, K, policy,
 
     stats = {}
     if collect_stats:
-        # physical slot placement[l] holds logical expert l, so the logical
-        # load B[e] is a gather of the sort pass's bincount — zero extra work
-        stats["expert_counts"] = jnp.take(disp.group_sizes, placement)
+        if token_mask is None:
+            # physical slot placement[l] holds logical expert l, so the
+            # logical load B[e] is a gather of the sort pass's bincount —
+            # zero extra work
+            stats["expert_counts"] = jnp.take(disp.group_sizes, placement)
+        else:
+            # masked tokens still dispatch (static shapes) but must not
+            # register load: count the logical ids under the mask instead
+            w = jnp.repeat(token_mask.reshape(T).astype(jnp.int32), K)
+            stats["expert_counts"] = jnp.zeros((E,), jnp.int32).at[
+                logical_idx.reshape(T * K)].add(w)
         if src2d is not None and n_sources > 0:
             if policy is None:
                 # fused Pallas stats kernel on the sorted ids (same pass)
@@ -115,6 +130,10 @@ def _ragged_moe_ffn(params, x, gates, logical_idx, placement, E, K, policy,
                 lg = logical_idx.reshape(T * K)[disp.sort_idx] \
                     .astype(jnp.int32)
                 ss = src2d.reshape(T)[disp.sort_idx // K].astype(jnp.int32)
+                if token_mask is not None:
+                    # source -1 matches no one-hot column in the kernel
+                    vs = token_mask.reshape(T)[disp.sort_idx // K]
+                    ss = jnp.where(vs, ss, -1)
                 _, a = ops.source_expert_count(
                     lg[:, None], ss, n_experts=E, n_sources=n_sources)
                 stats["source_expert"] = a
@@ -122,7 +141,8 @@ def _ragged_moe_ffn(params, x, gates, logical_idx, placement, E, K, policy,
                 # shardable XLA scatter-add (same formulation as the
                 # padded path)
                 stats["source_expert"] = expert_statistics(
-                    logical_idx, E, src2d, n_sources)["source_expert"]
+                    logical_idx, E, src2d, n_sources,
+                    token_mask=token_mask)["source_expert"]
 
     use_kernel = policy is None
     xs = disp.xs
@@ -145,12 +165,15 @@ def _ragged_moe_ffn(params, x, gates, logical_idx, placement, E, K, policy,
 def moe_layer(params, cfg, x, placement, *, source_ids=None, n_sources: int = 0,
               policy=None, collect_stats: bool = True,
               capacity_factor: Optional[float] = None,
-              ragged: Optional[bool] = None):
+              ragged: Optional[bool] = None, token_mask=None):
     """x: (B, S, D) -> (y (B, S, D), stats dict).
 
     placement: (E,) int32 logical->physical slot permutation.
     source_ids: (B,) int32 DP-source id per batch row (for A[s, e]).
     ragged: override for PERF["ragged_dispatch"] (None = use the toggle).
+    token_mask: (B, S) bool — tokens to EXCLUDE from the routing statistics
+    (padding rows, inactive decode lanes). Compute is unaffected (static
+    shapes route everything); only the reported load is masked.
 
     Two dispatch formulations:
 
@@ -179,13 +202,14 @@ def moe_layer(params, cfg, x, placement, *, source_ids=None, n_sources: int = 0,
     if use_ragged:
         y, stats = _ragged_moe_ffn(params, x, gates, logical_idx, placement,
                                    E, K, policy, src, n_sources,
-                                   collect_stats)
+                                   collect_stats, token_mask=token_mask)
         return _moe_epilogue(params, cfg, x, y, stats, gates, logical_idx,
                              probs, B, S, E, K, policy)
 
     stats = {}
     if collect_stats:
-        stats = expert_statistics(logical_idx, E, src, n_sources)
+        stats = expert_statistics(logical_idx, E, src, n_sources,
+                                  token_mask=token_mask)
 
     # Decode (S == 1): per-row grouping would give every row its own
     # capacity-4 expert buffer (64x flop waste at batch 128); treat the whole

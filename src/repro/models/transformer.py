@@ -160,6 +160,31 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     return cache
 
 
+def init_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int):
+    """Physical KV page pool: per super-block position k/v arrays of shape
+    (n_super, n_pages, page_size, Hkv, hd). Page 0 is the reserved garbage
+    page (see serving/paged.py) — allocators hand out ids >= 1, and masked
+    writes land in page 0. Request state (block tables, lengths) lives
+    outside the pytree and is passed per call.
+    """
+    if cfg.family == "hybrid":
+        raise NotImplementedError("paged KV: mamba state is not paged")
+    if cfg.local_global_ratio > 0 or cfg.sliding_window > 0:
+        raise NotImplementedError("paged KV: sliding-window layers "
+                                  "use the dense ring cache")
+    if cfg.attn_logit_softcap:
+        # the paged decode kernel has no softcap term yet; admitting such a
+        # config would make decode diverge from the softcapped prefill
+        raise NotImplementedError("paged KV: attn_logit_softcap "
+                                  "unsupported in paged_decode")
+    descs = period_descriptors(cfg)
+    ns = n_super_blocks(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    shape = (ns, n_pages, page_size, cfg.n_kv_heads, cfg.head_dim)
+    return {f"pos{j}": {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+            for j in range(len(descs))}
+
+
 # ------------------------------------------------------------------ attention
 def _quantize_kv(t):
     """(B, S, H, hd) -> (int8 values, (B, S, H) fp32 scales)."""
@@ -187,7 +212,54 @@ def _qkv(lp, cfg, xn, positions):
     return q, k, v
 
 
-def attention_block(lp, cfg, desc, x, positions, cache, mode, policy=None):
+def _paged_attention(cfg, q, k, v, positions, cache, mode, paged):
+    """Paged-KV attention: scatter the new k/v into physical pages via the
+    block table, then attend through the block table.
+
+    cache: {"k": (P, ps, Hkv, hd), "v": ...} — one super-block slice of the
+    page pool. paged: {"block_tables" (B, NB), "valid" (B, S) rows to write,
+    "ctx_lens" (B,) live tokens incl. this chunk, "backend", "interpret"}.
+    Invalid rows (chunk padding / inactive decode lanes) write to garbage
+    page 0 and attend to nothing.
+    """
+    from repro.kernels.paged_decode import paged_decode
+
+    B, S = positions.shape
+    pk, pv = cache["k"], cache["v"]
+    ps = pk.shape[1]
+    bt = paged["block_tables"].astype(jnp.int32)       # (B, NB)
+    NB = bt.shape[1]
+    valid = paged["valid"]                             # (B, S)
+    ctx = paged["ctx_lens"].astype(jnp.int32)          # (B,)
+    bidx = jnp.arange(B)[:, None]
+    blk = jnp.clip(positions // ps, 0, NB - 1)
+    page = jnp.where(valid, bt[bidx, blk], 0).reshape(-1)
+    off = jnp.where(valid, positions % ps, 0).reshape(-1)
+    Hkv, hd = pk.shape[2], pk.shape[3]
+    ck = pk.at[page, off].set(k.reshape(B * S, Hkv, hd).astype(pk.dtype))
+    cv = pv.at[page, off].set(v.reshape(B * S, Hkv, hd).astype(pv.dtype))
+    new_cache = dict(cache, k=ck, v=cv)
+
+    if mode == "paged_decode":                         # S == 1, kernel path
+        out = paged_decode(q[:, 0], ck, cv, bt, ctx,
+                           backend=paged.get("backend", "auto"),
+                           interpret=paged.get("interpret", False))
+        return out[:, None], new_cache
+    # chunked prefill: dense gather of the request's pages (prior context +
+    # the chunk just written), causal mask via absolute positions
+    L = NB * ps
+    kd = ck[bt].reshape(B, L, Hkv, hd)
+    vd = cv[bt].reshape(B, L, Hkv, hd)
+    kpos = jnp.arange(L, dtype=jnp.int32)[None]
+    kpos = jnp.where(kpos < ctx[:, None], kpos, -1)
+    out = flash_attention(q, kd, vd, q_pos=positions, k_pos=kpos,
+                          causal=True, window=0,
+                          softcap_val=cfg.attn_logit_softcap)
+    return out, new_cache
+
+
+def attention_block(lp, cfg, desc, x, positions, cache, mode, policy=None,
+                    paged=None):
     """x: (B, S, D); positions (B, S). Returns (attn_out, new_cache)."""
     B, S, _ = x.shape
     xn = rms_norm(x, lp["ln_attn"], cfg.norm_eps)
@@ -199,7 +271,10 @@ def attention_block(lp, cfg, desc, x, positions, cache, mode, policy=None):
 
     new_cache = cache
     quant = cache is not None and "k_scale" in cache
-    if mode == "train":
+    if mode in ("paged_prefill", "paged_decode"):
+        out, new_cache = _paged_attention(cfg, q, k, v, positions, cache,
+                                          mode, paged)
+    elif mode == "train":
         out = flash_attention(q, k, v, q_pos=positions, k_pos=positions,
                               causal=True, window=window,
                               softcap_val=cfg.attn_logit_softcap)
@@ -309,10 +384,11 @@ def _split_decode(q, ck, cv, positions, k_pos, window, cap, n_split,
 
 # ------------------------------------------------------------------ layer
 def decoder_layer(lp, cfg, desc, x, positions, cache, mode, placement_row,
-                  source_ids, n_sources, policy=None, collect_stats=True):
+                  source_ids, n_sources, policy=None, collect_stats=True,
+                  paged=None):
     """Returns (x, new_cache, stats_or_None)."""
     attn_out, new_cache = attention_block(lp, cfg, desc, x, positions, cache,
-                                          mode, policy)
+                                          mode, policy, paged)
     if desc.hybrid:
         xn = rms_norm(x, lp["ln_attn"], cfg.norm_eps)
         state = None
@@ -336,9 +412,13 @@ def decoder_layer(lp, cfg, desc, x, positions, cache, mode, placement_row,
     xn = rms_norm(x, lp["ln_ffn"], cfg.norm_eps)
     stats = None
     if desc.moe:
+        # paged runs carry padding rows / inactive lanes: keep them out of
+        # the routing statistics so the coordinator sees only real load
+        mask = paged["valid"] if paged is not None else None
         y, stats = moe_mod.moe_layer(
             lp["moe"], cfg, xn, placement_row, source_ids=source_ids,
-            n_sources=n_sources, policy=policy, collect_stats=collect_stats)
+            n_sources=n_sources, policy=policy, collect_stats=collect_stats,
+            token_mask=mask)
     else:
         y = mlp(lp["mlp"], xn, policy)
     if cfg.post_norms:
@@ -362,9 +442,35 @@ def identity_placement(cfg: ModelConfig):
                     (n_moe, 1))
 
 
+def migrate_params_for_placement(params, cfg, old_placement, new_placement):
+    """Reorder the stacked physical expert weights after a placement update.
+
+    ``placement`` rows are (n_moe_layers, E) = (ns * mp, E); layer l lives at
+    super-block l // mp, moe-position index l % mp. Must be applied whenever
+    a data-plane engine adopts a new placement, or logical experts would
+    execute another expert's physical weights (see moe.migrate_expert_weights
+    for the per-layer permutation and its cost accounting).
+    """
+    descs = period_descriptors(cfg)
+    moe_pos = _moe_positions(descs)
+    mp = len(moe_pos)
+    if mp == 0:
+        return params
+    ns = n_super_blocks(cfg)
+    old_r = jnp.asarray(old_placement, jnp.int32).reshape(ns, mp, -1)
+    new_r = jnp.asarray(new_placement, jnp.int32).reshape(ns, mp, -1)
+    blocks = dict(params["blocks"])
+    for mi, j in enumerate(moe_pos):
+        blk = dict(blocks[f"pos{j}"])
+        blk["moe"] = jax.vmap(moe_mod.migrate_expert_weights)(
+            blk["moe"], old_r[:, mi], new_r[:, mi])
+        blocks[f"pos{j}"] = blk
+    return dict(params, blocks=blocks)
+
+
 def superblock_forward(blk_params, cfg, descs, x, positions, blk_cache,
                        mode, blk_placement, source_ids, n_sources, policy,
-                       collect_stats):
+                       collect_stats, paged=None):
     """One super-block (period of layers). Module-level so the roofline
     analyzer can lower it standalone (scan bodies are counted once by
     XLA cost analysis — launch/roofline.py scales by trip count)."""
@@ -381,7 +487,7 @@ def superblock_forward(blk_params, cfg, descs, x, positions, blk_cache,
             mi += 1
         x, nc, st = decoder_layer(
             lp, cfg, desc, x, positions, c, mode, prow, source_ids,
-            n_sources, policy, collect_stats)
+            n_sources, policy, collect_stats, paged)
         if blk_cache is not None:
             new_blk_cache[f"pos{j}"] = nc
         if st is not None:
@@ -394,7 +500,8 @@ def superblock_forward(blk_params, cfg, descs, x, positions, blk_cache,
 
 
 def _stack_forward(params, cfg, x, positions, cache, mode, placement,
-                   source_ids, n_sources, policy, collect_stats, remat):
+                   source_ids, n_sources, policy, collect_stats, remat,
+                   paged=None):
     """Scan over super-blocks. x: (B, S, D)."""
     descs = period_descriptors(cfg)
     ns = n_super_blocks(cfg)
@@ -409,7 +516,8 @@ def _stack_forward(params, cfg, x, positions, cache, mode, placement,
         blk_params, blk_cache, blk_placement = xs
         x, new_blk_cache, stats = superblock_forward(
             blk_params, cfg, descs, x, positions, blk_cache, mode,
-            blk_placement, source_ids, n_sources, policy, collect_stats)
+            blk_placement, source_ids, n_sources, policy, collect_stats,
+            paged)
         return x, (new_blk_cache, stats)
 
     if remat:
@@ -475,6 +583,71 @@ def prefill(params, cfg: ModelConfig, batch, cache, *, placement=None,
         last = x[jnp.arange(B), jnp.clip(lengths - 1, 0, S - 1)]
     logits = lm_logits(params["embed"], cfg, last)
     return logits, cache, stats
+
+
+def prefill_chunk_paged(params, cfg: ModelConfig, batch, pages, *,
+                        block_tables, placement=None, source_ids=None,
+                        n_sources: int = 0, collect_stats: bool = True,
+                        attn_backend: str = "auto", interpret: bool = False):
+    """Chunked prefill into the paged KV pool.
+
+    batch: {tokens (B, S), chunk_starts (B,), chunk_lens (B,)} — row b
+    prefills prompt positions [chunk_starts[b], chunk_starts[b] + chunk_lens[b])
+    (rows past chunk_lens are padding and write to the garbage page).
+    Earlier chunks' KV is read back through the block table, so attention is
+    exact across chunk boundaries. Returns (logits_at_chunk_end (B, V),
+    pages, stats) — logits are only meaningful when the chunk completes the
+    prompt.
+    """
+    x = _inputs_to_embed(params, cfg, batch)
+    B, S = x.shape[:2]
+    starts = batch["chunk_starts"].astype(jnp.int32)
+    lens = batch["chunk_lens"].astype(jnp.int32)
+    positions = starts[:, None] + jnp.arange(S, dtype=jnp.int32)[None]
+    paged = {"block_tables": block_tables,
+             "valid": jnp.arange(S, dtype=jnp.int32)[None] < lens[:, None],
+             "ctx_lens": starts + lens,
+             "backend": attn_backend, "interpret": interpret}
+    if placement is None:
+        placement = identity_placement(cfg)
+    x, pages, stats = _stack_forward(
+        params, cfg, x, positions, pages, "paged_prefill", placement,
+        source_ids, n_sources, None, collect_stats, remat=False, paged=paged)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    last = x[jnp.arange(B), jnp.clip(lens - 1, 0, S - 1)]
+    logits = lm_logits(params["embed"], cfg, last)
+    return logits, pages, stats
+
+
+def decode_step_paged(params, cfg: ModelConfig, tokens, pages, lengths, *,
+                      block_tables, active=None, placement=None,
+                      source_ids=None, n_sources: int = 0,
+                      collect_stats: bool = True, attn_backend: str = "auto",
+                      interpret: bool = False):
+    """One batched decode token against the paged KV pool.
+
+    tokens (B,) int32; lengths (B,) current context per lane (the new token
+    is written at position lengths[b]); block_tables (B, NB); active (B,)
+    bool marks live lanes — inactive lanes write to the garbage page and
+    emit zero attention.
+    """
+    x = embed_tokens(params["embed"], cfg, tokens[:, None])   # (B, 1, D)
+    lengths = lengths.astype(jnp.int32)
+    positions = lengths[:, None]
+    if active is None:
+        active = jnp.ones((tokens.shape[0],), bool)
+    paged = {"block_tables": block_tables,
+             "valid": active[:, None],
+             "ctx_lens": jnp.where(active, lengths + 1, 0),
+             "backend": attn_backend, "interpret": interpret}
+    if placement is None:
+        placement = identity_placement(cfg)
+    x, pages, stats = _stack_forward(
+        params, cfg, x, positions, pages, "paged_decode", placement,
+        source_ids, n_sources, None, collect_stats, remat=False, paged=paged)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = lm_logits(params["embed"], cfg, x[:, 0])
+    return logits, pages, stats
 
 
 def decode_step(params, cfg: ModelConfig, tokens, cache, lengths, *,

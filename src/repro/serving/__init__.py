@@ -1,12 +1,18 @@
 from repro.serving.costmodel import CostModelConfig, EngineCostModel
 from repro.serving.engine import DPEngine, EngineConfig
 from repro.serving.kvcache import BlockPool, SlotAllocator
+from repro.serving.paged import GARBAGE_PAGE, PagedBlockAllocator
+from repro.serving.paged_engine import (PagedEngineConfig, PagedModelRunner,
+                                        PagedRealEngine)
+from repro.serving.real_cluster import RealClusterConfig, serve_real_cluster
 from repro.serving.request import Request, RequestState
 from repro.serving.routing_sim import SourceExpertTraffic
 from repro.serving.simulator import (PAPER_SYSTEMS, SimResult, SystemConfig,
                                      simulate)
 
 __all__ = ["CostModelConfig", "EngineCostModel", "DPEngine", "EngineConfig",
-           "BlockPool", "SlotAllocator", "Request", "RequestState",
-           "SourceExpertTraffic", "PAPER_SYSTEMS", "SimResult",
-           "SystemConfig", "simulate"]
+           "BlockPool", "SlotAllocator", "GARBAGE_PAGE",
+           "PagedBlockAllocator", "PagedEngineConfig", "PagedModelRunner",
+           "PagedRealEngine", "RealClusterConfig", "serve_real_cluster",
+           "Request", "RequestState", "SourceExpertTraffic", "PAPER_SYSTEMS",
+           "SimResult", "SystemConfig", "simulate"]

@@ -16,6 +16,7 @@ import numpy as np
 from repro.core.queue_policy import QueueConfig, order_queue, order_queue_fcfs
 from repro.core.traces import EngineTrace
 from repro.serving.costmodel import EngineCostModel
+from repro.serving.engine_util import select_preemption_victim
 from repro.serving.kvcache import BlockPool
 from repro.serving.request import Request, RequestState
 from repro.serving.routing_sim import SourceExpertTraffic
@@ -54,11 +55,24 @@ class DPEngine:
         self.total_prefill_tokens = 0
         self.total_decode_tokens = 0
         self.busy_time = 0.0
+        self.n_stalled_total = 0
+        self._stalled_last = 0
 
     # ---- queue ----------------------------------------------------------
     def enqueue(self, req: Request, now: float) -> None:
         req.engine_id = self.engine_id
         req.dispatch_time = now
+        # a trajectory larger than the whole pool can never complete: with
+        # the stall-instead-of-corrupt growth path it would stall forever,
+        # so reject it up front (mirrors the real engines)
+        need = self.pool.blocks_for(req.prompt_len + req.max_new_tokens,
+                                    self.cfg.kv_block)
+        if need > self.pool.total_blocks:
+            req.state = RequestState.FINISHED
+            req.error = "prompt_exceeds_kv_capacity"
+            req.finish_time = now
+            self.finished.append(req)
+            return
         req.state = RequestState.WAITING
         self.waiting.append(req)
 
@@ -85,14 +99,12 @@ class DPEngine:
             self.waiting.remove(r)
             self.running.append(r)
 
-    def _preempt_one(self) -> bool:
-        """Evict the latest-arrived decoding request (vLLM recompute mode)."""
-        cands = [r for r in self.running if r.remaining_prefill == 0]
-        if not cands:
-            cands = self.running
-        if not cands:
+    def _preempt_one(self, protect: Optional[Request] = None) -> bool:
+        """Evict the latest-arrived decoding request (vLLM recompute mode);
+        the protected lane stalls instead when nothing else can yield."""
+        victim = select_preemption_victim(self.running, protect)
+        if victim is None:
             return False
-        victim = max(cands, key=lambda r: r.arrival_time)
         self.running.remove(victim)
         self.pool.free(victim.req_id)
         victim.prefill_done = 0
@@ -110,13 +122,27 @@ class DPEngine:
         decode_reqs = [r for r in self.running if r.remaining_prefill == 0]
         prefill_reqs = [r for r in self.running if r.remaining_prefill > 0]
 
-        # KV growth for decoders; preempt under pressure
+        # KV growth for decoders; preempt under pressure. If even preemption
+        # cannot free a block, STALL the request for this step (it emits no
+        # token and holds its reservation) instead of decoding without the
+        # allocation — proceeding would corrupt the pool accounting.
+        stalled = 0
         for r in list(decode_reqs):
-            while not self.pool.allocate(r.req_id, r.context_len + 1):
-                if not self._preempt_one():
-                    break
-            if r.state is RequestState.PREEMPTED:
+            if r.state is RequestState.PREEMPTED:  # evicted for an earlier lane
                 decode_reqs.remove(r)
+                continue
+            ok = self.pool.allocate(r.req_id, r.context_len + 1)
+            while not ok and self._preempt_one(protect=r):
+                ok = self.pool.allocate(r.req_id, r.context_len + 1)
+            if not ok:
+                decode_reqs.remove(r)
+                stalled += 1
+        self._stalled_last = stalled
+        self.n_stalled_total += stalled
+        # a later lane's protected growth can evict a lane processed
+        # earlier in this loop — it must not receive decode effects
+        decode_reqs = [r for r in decode_reqs
+                       if r.state is not RequestState.PREEMPTED]
 
         budget = max(self.cfg.token_budget - len(decode_reqs), 0)
         prefill_work: List[Tuple[Request, int]] = []
@@ -165,7 +191,8 @@ class DPEngine:
             self.traffic.maybe_drift()
 
         return dur, routed, {"prefill_tokens": n_prefill,
-                             "decode_tokens": n_decode}
+                             "decode_tokens": n_decode,
+                             "stalled": self._stalled_last}
 
     def _finish(self, r: Request, t: float) -> None:
         r.state = RequestState.FINISHED
@@ -187,6 +214,7 @@ class DPEngine:
             moe_pressure=self.moe_pressure,
             n_running=len(self.running),
             n_waiting=len(self.waiting),
+            n_stalled=self._stalled_last,
             timestamp=now,
         )
 

@@ -1,0 +1,54 @@
+"""Helpers shared by the serving engines (simulated, real, paged).
+
+Centralised so the three engines cannot silently diverge on: MoE dispatch-
+mode pinning inside jit traces, (B, A) stats-window draining for the
+coordinator, and preemption victim selection.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import numpy as np
+
+from repro.models import moe as moe_mod
+from repro.serving.request import Request
+
+
+def pin_dispatch_mode(fn, get_mode):
+    """Wrap ``fn`` so the PERF['ragged_dispatch'] toggle equals
+    ``get_mode()`` while jit traces it — per-engine A/B dispatch modes must
+    not leak into other engines' compiles."""
+    def traced(*args, **kw):
+        prev = moe_mod.PERF["ragged_dispatch"]
+        moe_mod.PERF["ragged_dispatch"] = get_mode()
+        try:
+            return fn(*args, **kw)
+        finally:
+            moe_mod.PERF["ragged_dispatch"] = prev
+    return traced
+
+
+def drain_window_stats(stats_log: List[dict]):
+    """Sum and clear accumulated per-step MoE stats -> (B, A) numpy arrays
+    for the coordinator's profiler, or (None, None) if nothing accrued."""
+    if not stats_log:
+        return None, None
+    B = sum(s["expert_counts"] for s in stats_log)
+    A = sum(s["source_expert"] for s in stats_log)
+    stats_log.clear()
+    return np.asarray(B), np.asarray(A)
+
+
+def select_preemption_victim(running: List[Request],
+                             protect: Optional[Request] = None
+                             ) -> Optional[Request]:
+    """vLLM recompute-mode victim: the latest-arrived decode-phase request
+    (any phase as fallback), never ``protect`` — evicting the request whose
+    own growth triggered the eviction would trade progress for recompute."""
+    cands = [r for r in running
+             if r.remaining_prefill == 0 and r is not protect]
+    if not cands:
+        cands = [r for r in running if r is not protect]
+    if not cands:
+        return None
+    return max(cands, key=lambda r: r.arrival_time)

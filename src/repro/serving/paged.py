@@ -1,0 +1,83 @@
+"""Physical paged KV allocator: block tables + free-list on BlockPool books.
+
+``PagedBlockAllocator`` extends the control-plane ``BlockPool`` (the thing
+``kv_usage`` traces and Algorithm 1's KV-protection path read) with the
+physical side: a free-list of page ids and per-request block tables. The
+accounting invariant — ``free_blocks == len(free page ids)`` — makes the
+scheduler's ``kv_usage`` signal the *actual* allocator state of the data
+plane, not a parallel estimate.
+
+Page id 0 is reserved as the garbage page: it is never handed out, and the
+model's masked writes (chunk padding, inactive decode lanes) land there
+(see ``models/transformer.init_paged_cache``). Physical arrays therefore
+have ``n_pages + 1`` rows for ``n_pages`` usable pages.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.serving.kvcache import BlockPool
+
+GARBAGE_PAGE = 0
+
+
+class PagedBlockAllocator(BlockPool):
+    """BlockPool accounting + physical page ids + per-request block tables."""
+
+    def __init__(self, n_pages: int, page_size: int = 16):
+        super().__init__(n_pages * page_size, page_size)
+        assert self.total_blocks == n_pages
+        self.n_pages = n_pages
+        # LIFO free-list of physical ids; id 0 is the reserved garbage page
+        self._free_ids: List[int] = list(range(n_pages, 0, -1))
+        self.tables: Dict[int, List[int]] = {}
+
+    # ---- allocation -----------------------------------------------------
+    def allocate(self, req_id: int, tokens: int) -> bool:
+        """Grow req's block table to cover ``tokens`` total. False if OOM."""
+        held = len(self.tables.get(req_id, []))
+        need = self.blocks_for(tokens, self.block_size) - held
+        if need <= 0:
+            return True
+        if need > len(self._free_ids):
+            return False
+        pages = [self._free_ids.pop() for _ in range(need)]
+        self.tables.setdefault(req_id, []).extend(pages)
+        # mirror into the BlockPool books (kv_usage reads these)
+        self.free_blocks -= need
+        self._held[req_id] = self._held.get(req_id, 0) + need
+        return True
+
+    def free(self, req_id: int) -> None:
+        for p in reversed(self.tables.pop(req_id, [])):
+            self._free_ids.append(p)
+        super().free(req_id)
+
+    # ---- block-table views ---------------------------------------------
+    def table_of(self, req_id: int) -> List[int]:
+        return self.tables.get(req_id, [])
+
+    def block_table_array(self, req_ids: Sequence[Optional[int]],
+                          max_blocks: int) -> np.ndarray:
+        """(len(req_ids), max_blocks) int32, garbage-page padded. ``None``
+        entries produce all-garbage rows (inactive decode lanes)."""
+        out = np.full((len(req_ids), max_blocks), GARBAGE_PAGE, np.int32)
+        for i, rid in enumerate(req_ids):
+            if rid is None:
+                continue
+            t = self.tables.get(rid, [])
+            out[i, :len(t)] = t[:max_blocks]
+        return out
+
+    def check_invariants(self) -> None:
+        """Accounting and physical views must agree (test hook)."""
+        assert self.free_blocks == len(self._free_ids), \
+            (self.free_blocks, len(self._free_ids))
+        held = sorted(p for t in self.tables.values() for p in t)
+        assert GARBAGE_PAGE not in held
+        assert len(set(held)) == len(held), "page double-booked"
+        assert len(held) + len(self._free_ids) == self.n_pages
+        for rid, t in self.tables.items():
+            assert self._held.get(rid, 0) == len(t)

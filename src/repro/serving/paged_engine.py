@@ -1,0 +1,367 @@
+"""Paged real-data-plane engine: continuous batching on physical paged KV.
+
+``PagedRealEngine`` replaces the fixed-slot ``RealModelEngine`` data plane
+with the production layout: a physical page pool shared by all requests
+(``serving/paged.py``), per-request block tables, chunked prefill under a
+per-step token budget, batched block-table decode
+(``kernels/paged_decode``), and preemption that actually reclaims pages and
+re-queues the victim through ``order_queue`` for recompute. Every trace
+signal (remaining/waiting prefill tokens, token-level ``kv_usage``,
+stalls) is read off the live allocator and request state, so Algorithm 1
+sees honest backend pressure from the real plane — the same contract the
+simulator provides.
+
+One ``PagedModelRunner`` (the jitted paged model functions) is shared by
+all engines of a cluster: engine identity enters as the ``source_ids``
+argument, so N engines cost one compile per entry point.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.queue_policy import QueueConfig, order_queue
+from repro.core.traces import EngineTrace
+from repro.models import moe as moe_mod
+from repro.models import transformer as tfm
+from repro.serving.engine_util import (drain_window_stats, pin_dispatch_mode,
+                                       select_preemption_victim)
+from repro.serving.paged import PagedBlockAllocator
+from repro.serving.request import Request, RequestState
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedEngineConfig:
+    page_size: int = 8
+    n_pages: int = 96                 # usable pages (garbage page 0 extra)
+    max_blocks_per_req: int = 12      # static block-table width NB
+    max_batch: int = 8                # decode lanes per step
+    token_budget: int = 32            # per-step chunked-prefill budget
+    chunk_buckets: Tuple[int, ...] = (8, 16, 32)   # padded prefill shapes
+    theta_age_s: float = 5.0
+    attn_backend: str = "auto"        # auto | pallas | xla
+    interpret: bool = False           # Pallas interpret mode (CPU tests)
+
+    @property
+    def max_len(self) -> int:
+        """Per-request KV capacity in tokens."""
+        return self.page_size * self.max_blocks_per_req
+
+
+class PagedModelRunner:
+    """Jitted paged-model entry points, shared across a cluster's engines."""
+
+    def __init__(self, cfg, params, ecfg: PagedEngineConfig, *,
+                 n_sources: int, ragged_dispatch: Optional[bool] = None):
+        if cfg.input_mode != "tokens":
+            raise NotImplementedError("paged runtime serves token models")
+        self.cfg = cfg
+        self.params = params
+        self.ecfg = ecfg
+        self.n_sources = n_sources
+        self.ragged_dispatch = (moe_mod.PERF["ragged_dispatch"]
+                                if ragged_dispatch is None
+                                else ragged_dispatch)
+        self._prefill_jits: Dict[int, object] = {}
+        self._decode_jit = jax.jit(self._pin(self._decode_fn))
+
+    def _pin(self, fn):
+        """Pin this runner's MoE dispatch mode while jit traces ``fn``."""
+        return pin_dispatch_mode(fn, lambda: self.ragged_dispatch)
+
+    def _decode_fn(self, params, tokens, pages, lengths, block_tables,
+                   active, placement, source_ids):
+        return tfm.decode_step_paged(
+            params, self.cfg, tokens, pages, lengths,
+            block_tables=block_tables, active=active, placement=placement,
+            source_ids=source_ids, n_sources=self.n_sources,
+            collect_stats=self.cfg.moe.enabled,
+            attn_backend=self.ecfg.attn_backend,
+            interpret=self.ecfg.interpret)
+
+    def _prefill_fn(self, params, batch, pages, block_tables, placement,
+                    source_ids):
+        return tfm.prefill_chunk_paged(
+            params, self.cfg, batch, pages, block_tables=block_tables,
+            placement=placement, source_ids=source_ids,
+            n_sources=self.n_sources, collect_stats=self.cfg.moe.enabled,
+            attn_backend=self.ecfg.attn_backend,
+            interpret=self.ecfg.interpret)
+
+    def decode(self, tokens, pages, lengths, block_tables, active,
+               placement, source_ids):
+        return self._decode_jit(self.params, tokens, pages, lengths,
+                                block_tables, active, placement, source_ids)
+
+    def prefill_chunk(self, batch, pages, block_tables, placement,
+                      source_ids):
+        S = int(batch["tokens"].shape[1])
+        if S not in self._prefill_jits:       # one compile per chunk bucket
+            self._prefill_jits[S] = jax.jit(self._pin(self._prefill_fn))
+        return self._prefill_jits[S](self.params, batch, pages,
+                                     block_tables, placement, source_ids)
+
+    def bucket_for(self, chunk: int) -> int:
+        for b in self.ecfg.chunk_buckets:
+            if chunk <= b:
+                return b
+        return self.ecfg.chunk_buckets[-1]
+
+    def init_pages(self):
+        return tfm.init_paged_cache(self.cfg, self.ecfg.n_pages + 1,
+                                    self.ecfg.page_size)
+
+
+class PagedRealEngine:
+    """One DP replica serving the real model from the paged KV runtime."""
+
+    def __init__(self, engine_id: int, cfg, params,
+                 ecfg: Optional[PagedEngineConfig] = None, *,
+                 runner: Optional[PagedModelRunner] = None,
+                 n_sources: int = 2,
+                 ragged_dispatch: Optional[bool] = None):
+        self.engine_id = engine_id
+        self.cfg = cfg
+        self.ecfg = ecfg or PagedEngineConfig()
+        self.runner = runner or PagedModelRunner(
+            cfg, params, self.ecfg, n_sources=n_sources,
+            ragged_dispatch=ragged_dispatch)
+        # a shared runner owns the physical page arrays' shape: this
+        # engine's allocator must never hand out ids past them (a smaller
+        # pool over a bigger runner is fine — the bench's tight run)
+        assert self.ecfg.page_size == self.runner.ecfg.page_size, \
+            "engine/runner page_size mismatch"
+        assert self.ecfg.n_pages <= self.runner.ecfg.n_pages, \
+            "engine pool larger than the runner's physical page arrays"
+        self.pool = PagedBlockAllocator(self.ecfg.n_pages,
+                                        self.ecfg.page_size)
+        self.pages = self.runner.init_pages()
+        self.waiting: List[Request] = []
+        self.running: List[Request] = []
+        self.finished: List[Request] = []
+        self.qcfg = QueueConfig(theta_age_s=self.ecfg.theta_age_s)
+        self.placement = np.asarray(tfm.identity_placement(cfg))
+        self.moe_pressure: float = 0.0
+        self.stats_log: List[Dict] = []
+        self.step_count = 0
+        self.n_stalled_total = 0
+        self._stalled_last = 0
+        # per-step telemetry (mirrors DPEngine for the harness/bench)
+        self.total_prefill_tokens = 0
+        self.total_decode_tokens = 0
+
+    # ---- KV bookkeeping --------------------------------------------------
+    @staticmethod
+    def _kv_len(r: Request) -> int:
+        """Tokens currently in this request's pages. After prefill the pool
+        holds the prompt; each decode step writes the previously sampled
+        token, so the newest sampled token is not yet stored."""
+        return r.prefill_done + max(r.generated - 1, 0)
+
+    # ---- admission -------------------------------------------------------
+    def enqueue(self, req: Request, now: float) -> None:
+        req.engine_id = self.engine_id
+        req.dispatch_time = now
+        # the full trajectory (prompt + every decode write) must fit both
+        # the block table (max_len) and the pool, or the output would be
+        # silently truncated by the capacity backstop in _run_decode
+        total = req.prompt_len + req.max_new_tokens
+        if total > self.ecfg.max_len or \
+                self.pool.blocks_for(total, self.ecfg.page_size) \
+                > self.ecfg.n_pages:
+            # reject instead of overflowing the block table: a lone admitted
+            # request must always be able to run to completion
+            req.state = RequestState.FINISHED
+            req.error = "prompt_exceeds_kv_capacity"
+            req.finish_time = now
+            self.finished.append(req)
+            return
+        req.state = RequestState.WAITING
+        self.waiting.append(req)
+
+    def _try_admit(self, now: float) -> None:
+        self.waiting = order_queue(self.waiting, now, self.qcfg)
+        admitted = []
+        for r in self.waiting:
+            if len(self.running) + len(admitted) >= self.ecfg.max_batch:
+                break
+            first = min(r.remaining_prefill, self.ecfg.token_budget)
+            if self.pool.allocate(r.req_id, r.prefill_done + first):
+                r.state = RequestState.RUNNING
+                admitted.append(r)
+            else:
+                break   # FIFO-in-priority-order admission (no bypass)
+        for r in admitted:
+            self.waiting.remove(r)
+            self.running.append(r)
+
+    def _preempt_one(self, protect: Optional[Request] = None) -> bool:
+        """Evict the latest-arrived request (recompute mode): reclaim its
+        pages and push it back through the queue."""
+        victim = select_preemption_victim(self.running, protect)
+        if victim is None:
+            return False
+        self.running.remove(victim)
+        self.pool.free(victim.req_id)
+        victim.prefill_done = 0
+        victim.generated = 0
+        victim.output_tokens = []
+        victim.n_preemptions += 1
+        victim.state = RequestState.PREEMPTED
+        self.waiting.append(victim)
+        return True
+
+    def _finish(self, r: Request, now: float) -> None:
+        r.state = RequestState.FINISHED
+        r.finish_time = now
+        self.running.remove(r)
+        self.pool.free(r.req_id)
+        self.finished.append(r)
+
+    # ---- one continuous-batching step -------------------------------------
+    def step(self, now: float) -> List[Request]:
+        self._try_admit(now)
+        finished: List[Request] = []
+
+        decode_reqs = [r for r in self.running if r.remaining_prefill == 0]
+        prefill_reqs = [r for r in self.running if r.remaining_prefill > 0]
+
+        # KV growth for decoders: preempt under pressure; if even preemption
+        # cannot free a page, STALL the lane this step (no token, no write)
+        # instead of decoding without backing pages.
+        stalled = 0
+        for r in list(decode_reqs):
+            if r.state is RequestState.PREEMPTED:   # evicted by an earlier lane
+                decode_reqs.remove(r)
+                continue
+            need = self._kv_len(r) + 1
+            ok = self.pool.allocate(r.req_id, need)
+            while not ok and self._preempt_one(protect=r):
+                ok = self.pool.allocate(r.req_id, need)
+            if not ok:
+                decode_reqs.remove(r)
+                stalled += 1
+        self._stalled_last = stalled
+        self.n_stalled_total += stalled
+
+        # chunked prefill under the step token budget (decode lanes first).
+        # Prefill growth may also preempt: without it, admitted prefills can
+        # fill the pool and deadlock waiting for each other's next chunk.
+        budget = max(self.ecfg.token_budget - len(decode_reqs), 0)
+        prefill_work: List[Tuple[Request, int]] = []
+        for r in prefill_reqs:
+            if budget <= 0:
+                break
+            if r.state is RequestState.PREEMPTED:
+                continue
+            chunk = min(r.remaining_prefill, budget,
+                        self.ecfg.chunk_buckets[-1])
+            need = r.prefill_done + chunk
+            ok = self.pool.allocate(r.req_id, need)
+            while not ok and self._preempt_one(protect=r):
+                ok = self.pool.allocate(r.req_id, need)
+            if not ok:
+                continue
+            prefill_work.append((r, chunk))
+            budget -= chunk
+        # prefill-side eviction may have reclaimed decode lanes
+        decode_reqs = [r for r in decode_reqs
+                       if r.state is not RequestState.PREEMPTED]
+
+        for r, chunk in prefill_work:
+            if r.state is RequestState.PREEMPTED:   # evicted by a later lane
+                continue
+            self._run_prefill_chunk(r, chunk, now)
+            if r.state is RequestState.FINISHED:
+                finished.append(r)
+        if decode_reqs:
+            finished.extend(self._run_decode(decode_reqs, now))
+        if prefill_work or decode_reqs or stalled:
+            self.step_count += 1
+        return finished
+
+    # ---- data-plane calls ------------------------------------------------
+    def _run_prefill_chunk(self, r: Request, chunk: int, now: float) -> None:
+        S = self.runner.bucket_for(chunk)
+        toks = np.zeros((1, S), np.int32)
+        toks[0, :chunk] = r.prompt_tokens[r.prefill_done:
+                                          r.prefill_done + chunk]
+        batch = {"tokens": jnp.asarray(toks),
+                 "chunk_starts": jnp.asarray([r.prefill_done], jnp.int32),
+                 "chunk_lens": jnp.asarray([chunk], jnp.int32)}
+        bt = jnp.asarray(self.pool.block_table_array(
+            [r.req_id], self.ecfg.max_blocks_per_req))
+        logits, self.pages, stats = self.runner.prefill_chunk(
+            batch, self.pages, bt, jnp.asarray(self.placement),
+            jnp.full((1,), self.engine_id, jnp.int32))
+        r.prefill_done += chunk
+        self.total_prefill_tokens += chunk
+        if stats is not None:
+            self.stats_log.append(jax.tree.map(np.asarray, stats))
+        if r.remaining_prefill == 0:
+            tok = int(jnp.argmax(logits[0]))
+            r.output_tokens = [tok]
+            r.generated = 1
+            r.first_token_time = now
+            if r.done:
+                self._finish(r, now)
+
+    def _run_decode(self, decode_reqs: List[Request],
+                    now: float) -> List[Request]:
+        B = self.ecfg.max_batch
+        lanes = decode_reqs[:B]
+        tokens = np.zeros(B, np.int32)
+        lengths = np.zeros(B, np.int32)
+        active = np.zeros(B, bool)
+        rids: List[Optional[int]] = [None] * B
+        for i, r in enumerate(lanes):
+            tokens[i] = r.output_tokens[-1]
+            lengths[i] = self._kv_len(r)
+            active[i] = True
+            rids[i] = r.req_id
+        bt = self.pool.block_table_array(rids, self.ecfg.max_blocks_per_req)
+        logits, self.pages, stats = self.runner.decode(
+            jnp.asarray(tokens), self.pages, jnp.asarray(lengths),
+            jnp.asarray(bt), jnp.asarray(active),
+            jnp.asarray(self.placement),
+            jnp.full((B,), self.engine_id, jnp.int32))
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        if stats is not None:
+            self.stats_log.append(jax.tree.map(np.asarray, stats))
+        finished = []
+        for i, r in enumerate(lanes):
+            r.output_tokens.append(int(nxt[i]))
+            r.generated += 1
+            self.total_decode_tokens += 1
+            if r.done or self._kv_len(r) + 1 >= self.ecfg.max_len:
+                self._finish(r, now)
+                finished.append(r)
+        return finished
+
+    # ---- control-plane surface -------------------------------------------
+    def trace(self, now: float) -> EngineTrace:
+        return EngineTrace(
+            engine_id=self.engine_id,
+            remaining_prefill_tokens=float(
+                sum(r.remaining_prefill for r in self.running)),
+            waiting_prefill_tokens=float(
+                sum(r.remaining_prefill for r in self.waiting)),
+            kv_usage=self.pool.usage,
+            moe_pressure=self.moe_pressure,
+            n_running=len(self.running),
+            n_waiting=len(self.waiting),
+            n_stalled=self._stalled_last,
+            timestamp=now,
+        )
+
+    def window_stats(self):
+        """Accumulated (B, A) since last call — feeds the coordinator."""
+        return drain_window_stats(self.stats_log)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting) or bool(self.running)

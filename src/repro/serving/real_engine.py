@@ -22,6 +22,7 @@ from repro.core.traces import EngineTrace
 from repro.models import build_model
 from repro.models import moe as moe_mod
 from repro.models.transformer import identity_placement
+from repro.serving.engine_util import drain_window_stats, pin_dispatch_mode
 from repro.serving.kvcache import SlotAllocator
 from repro.serving.request import Request, RequestState
 
@@ -57,14 +58,7 @@ class RealModelEngine:
 
         def _with_dispatch_mode(fn):
             """Pin this engine's dispatch mode while jit traces ``fn``."""
-            def traced(*args, **kw):
-                prev = moe_mod.PERF["ragged_dispatch"]
-                moe_mod.PERF["ragged_dispatch"] = self.ragged_dispatch
-                try:
-                    return fn(*args, **kw)
-                finally:
-                    moe_mod.PERF["ragged_dispatch"] = prev
-            return traced
+            return pin_dispatch_mode(fn, lambda: self.ragged_dispatch)
 
         def _decode(params, tokens, cache, lengths, placement):
             return self.fns.decode(params, tokens, cache, lengths,
@@ -88,6 +82,13 @@ class RealModelEngine:
     def enqueue(self, req: Request, now: float) -> None:
         req.engine_id = self.engine_id
         req.dispatch_time = now
+        if req.prompt_len >= self.max_len:
+            # an over-long prompt would silently overflow the slot's cache
+            # rows: reject up front with an error state instead
+            req.state = RequestState.FINISHED
+            req.error = "prompt_exceeds_max_len"
+            req.finish_time = now
+            return
         self.waiting.append(req)
 
     def _admit(self, now: float) -> None:
@@ -161,12 +162,18 @@ class RealModelEngine:
 
     # ---- traces ----------------------------------------------------------
     def trace(self, now: float) -> EngineTrace:
+        # honest signals: remaining prefill of admitted-but-unfinished
+        # prefills (one-shot prefill makes this usually 0, but it is
+        # *measured*, not hardcoded), queue pressure in prefill tokens
+        # still owed, and token-level KV occupancy — not slot count.
         return EngineTrace(
             engine_id=self.engine_id,
-            remaining_prefill_tokens=0.0,
+            remaining_prefill_tokens=float(
+                sum(r.remaining_prefill for r in self.req_of_slot.values())),
             waiting_prefill_tokens=float(
-                sum(r.prompt_len for r in self.waiting)),
-            kv_usage=float(self.active.sum()) / self.max_slots,
+                sum(r.remaining_prefill for r in self.waiting)),
+            kv_usage=float(self.lengths.sum()) / (self.max_slots
+                                                  * self.max_len),
             n_running=int(self.active.sum()),
             n_waiting=len(self.waiting),
             timestamp=now,
@@ -174,12 +181,7 @@ class RealModelEngine:
 
     def window_stats(self):
         """Accumulated (B, A) since last call — feeds the coordinator."""
-        if not self.stats_log:
-            return None, None
-        B = sum(s["expert_counts"] for s in self.stats_log)
-        A = sum(s["source_expert"] for s in self.stats_log)
-        self.stats_log.clear()
-        return np.asarray(B), np.asarray(A)
+        return drain_window_stats(self.stats_log)
 
     @property
     def has_work(self) -> bool:

@@ -31,6 +31,8 @@ class Request:
     first_token_time: float = -1.0
     finish_time: float = -1.0
     n_preemptions: int = 0
+    error: Optional[str] = None    # set when FINISHED is a rejection, e.g.
+                                   # a prompt exceeding the engine's KV capacity
 
     # ---- trace-signal helpers -----------------------------------------
     @property
