@@ -1,0 +1,142 @@
+"""Prefix-sharing paged-KV bench (BENCH_prefix_sharing).
+
+Shared-system-prompt workload (one 24-token system prefix, distinct user
+tails) on the 2-engine Gimbal cluster over the paged runtime, served twice
+with one jitted ``PagedModelRunner``:
+
+* ``baseline`` — sharing off (every request prefills the system prompt);
+* ``shared``   — ``SharedPagedAllocator``: ref-counted pages, hash-indexed
+  prefix cache, COW; prefill starts at the first unshared token.
+
+Asserts (and records in the JSON): the shared run is **bit-exact** vs the
+baseline on the same stream, allocates **strictly fewer physical pages**,
+and computes fewer prefill tokens (the skip == cache-hit tokens). TTFT and
+rounds-to-drain deltas are reported; CPU wall-clock is a smoke-health
+signal, not a speed claim. Emits
+``experiments/bench/BENCH_prefix_sharing.json``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from benchmarks.common import FAST, emit, save_json
+
+
+def _requests(cfg, n, sys_len=24, seed=0):
+    from repro.serving import Request
+    rng = np.random.default_rng(seed)
+    system = rng.integers(0, cfg.vocab_size, sys_len).tolist()
+    reqs = []
+    for i in range(n):
+        tail = rng.integers(0, cfg.vocab_size,
+                            int(rng.integers(4, 10))).tolist()
+        toks = system + tail
+        reqs.append(Request(
+            req_id=i, prompt_len=len(toks),
+            max_new_tokens=int(rng.integers(3, 6)),
+            arrival_time=0.02 * i, prompt_tokens=toks))
+    return reqs
+
+
+def _serve(cfg, params, runner, ecfg, n_requests, seed):
+    from repro.serving import (PagedRealEngine, RealClusterConfig,
+                               RequestState, serve_real_cluster)
+    engines = [PagedRealEngine(i, cfg, params, ecfg, runner=runner,
+                               n_sources=2) for i in range(2)]
+    reqs = _requests(cfg, n_requests, seed=seed)
+    t0 = time.perf_counter()
+    res = serve_real_cluster(reqs, engines,
+                             cluster_cfg=RealClusterConfig(window_tokens=250))
+    wall = time.perf_counter() - t0
+    for e in engines:
+        e.pool.check_invariants()
+        assert e.pool.usage == 0.0      # shared-aware books balance
+    done = sum(1 for r in reqs if r.state is RequestState.FINISHED
+               and not r.error)
+    return {
+        "served": done, "n_requests": len(reqs),
+        "wall_s": wall,
+        "rounds": res.signals["rounds"],
+        "prefill_tokens": sum(e.total_prefill_tokens for e in engines),
+        "decode_tokens": sum(e.total_decode_tokens for e in engines),
+        "pages_allocated": res.signals["pages_allocated"],
+        "prefix_hit_tokens": res.signals["prefix_hit_tokens"],
+        "cow_copies": res.signals["cow_copies"],
+        "kv_peak": res.signals["kv_peak"],
+        "preemptions": res.signals["preemptions"],
+        "mean_ttft_s": res.mean_ttft, "mean_e2e_s": res.mean_e2e,
+        "outputs": {r.req_id: list(r.output_tokens or []) for r in reqs},
+    }
+
+
+def run() -> None:
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.configs.base import reduced
+    from repro.models import build_model
+    from repro.serving import PagedEngineConfig, PagedModelRunner
+
+    cfg = reduced(get_smoke_config("qwen3-moe-30b-a3b"), n_layers=2)
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    base = PagedEngineConfig(page_size=8, n_pages=48, max_blocks_per_req=8,
+                             max_batch=4, token_budget=16,
+                             chunk_buckets=(8, 16), attn_backend="xla")
+    runner = PagedModelRunner(cfg, params, base, n_sources=2)
+    n_req = 6 if FAST else 10
+
+    # warm every jit entry point so the timed runs measure serving
+    t0 = time.perf_counter()
+    _serve(cfg, params, runner, base, 2, seed=123)
+    compile_s = time.perf_counter() - t0
+
+    r_off = _serve(cfg, params, runner, base, n_req, seed=0)
+    shared_cfg = dataclasses.replace(base, prefix_sharing=True)
+    r_on = _serve(cfg, params, runner, shared_cfg, n_req, seed=0)
+
+    assert r_off["served"] == n_req and r_on["served"] == n_req
+    bit_exact = r_on["outputs"] == r_off["outputs"]
+    assert bit_exact, "prefix sharing changed served tokens"
+    pages_saved = r_off["pages_allocated"] - r_on["pages_allocated"]
+    assert pages_saved > 0, "shared run must allocate strictly fewer pages"
+    skipped = r_off["prefill_tokens"] - r_on["prefill_tokens"]
+    assert skipped == r_on["prefix_hit_tokens"] > 0
+
+    emit("prefix_sharing_baseline", r_off["wall_s"] * 1e6,
+         f"pages={r_off['pages_allocated']} "
+         f"prefill={r_off['prefill_tokens']} "
+         f"ttft={r_off['mean_ttft_s']:.3f}s rounds={r_off['rounds']}")
+    emit("prefix_sharing_shared", r_on["wall_s"] * 1e6,
+         f"pages={r_on['pages_allocated']} "
+         f"prefill={r_on['prefill_tokens']} "
+         f"ttft={r_on['mean_ttft_s']:.3f}s rounds={r_on['rounds']} "
+         f"cow={r_on['cow_copies']}")
+
+    for r in (r_off, r_on):
+        r.pop("outputs")
+    payload = {
+        "config": {"model": cfg.name, "n_layers": cfg.n_layers,
+                   "page_size": base.page_size, "n_pages": base.n_pages,
+                   "token_budget": base.token_budget,
+                   "system_prompt_tokens": 24, "n_requests": n_req,
+                   "backend": base.attn_backend},
+        "baseline": r_off,
+        "shared": r_on,
+        "bit_exact": bit_exact,
+        "pages_saved": pages_saved,
+        "prefill_tokens_skipped": skipped,
+        "ttft_speedup": (r_off["mean_ttft_s"]
+                         / max(r_on["mean_ttft_s"], 1e-9)),
+        "compile_s": compile_s,
+    }
+    path = save_json("BENCH_prefix_sharing", payload)
+    emit("prefix_sharing_headline", 0.0,
+         f"pages_saved={pages_saved} prefill_skipped={skipped} "
+         f"bit_exact={bit_exact} "
+         f"ttft_x={payload['ttft_speedup']:.2f} json={path}")
+
+
+if __name__ == "__main__":
+    run()

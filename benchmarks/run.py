@@ -3,11 +3,11 @@
 Prints ``name,us_per_call,derived`` CSV lines. Set REPRO_BENCH_FAST=1 for a
 reduced grid (used by CI-style smoke runs).
 
-``--smoke`` runs the MoE dispatch benchmark and the paged-serving
-end-to-end bench on reduced grids (CPU, <15s total) and writes
-``experiments/bench/BENCH_moe_dispatch.json`` +
-``experiments/bench/BENCH_paged_serving.json`` — the perf-trajectory
-tracking entry points for CI.
+``--smoke`` runs the MoE dispatch benchmark, the paged-serving end-to-end
+bench and the prefix-sharing differential bench on reduced grids (CPU)
+and writes ``experiments/bench/BENCH_moe_dispatch.json`` +
+``BENCH_paged_serving.json`` + ``BENCH_prefix_sharing.json`` — the
+perf-trajectory tracking entry points for CI.
 """
 from __future__ import annotations
 
@@ -27,11 +27,13 @@ MODULES = [
     "benchmarks.fig9_end_to_end",
     "benchmarks.fig_ragged_dispatch",
     "benchmarks.fig_paged_serving",
+    "benchmarks.fig_prefix_sharing",
     "benchmarks.roofline_table",
 ]
 
 SMOKE_MODULES = ["benchmarks.fig_ragged_dispatch",
-                 "benchmarks.fig_paged_serving"]
+                 "benchmarks.fig_paged_serving",
+                 "benchmarks.fig_prefix_sharing"]
 
 
 def main() -> None:

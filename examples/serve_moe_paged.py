@@ -6,8 +6,16 @@ budget, batched block-table decode, preemption that reclaims pages and
 recomputes, and truthful trace signals feeding Algorithm 1. The Gimbal
 coordinator consumes REAL router statistics and migrates experts live.
 
-PYTHONPATH=src python examples/serve_moe_paged.py
+With ``--shared-prefix`` every request carries a common 24-token system
+prompt and the engines run the ``SharedPagedAllocator`` (ref-counted pages
++ prefix cache + copy-on-write); the run is repeated with sharing off to
+show pages saved, prefill skipped and the TTFT delta — with bit-identical
+outputs.
+
+PYTHONPATH=src python examples/serve_moe_paged.py [--shared-prefix]
 """
+import dataclasses
+
 import numpy as np
 
 from repro.configs import get_smoke_config
@@ -17,31 +25,31 @@ from repro.serving import (PagedEngineConfig, PagedModelRunner,
                            RequestState, serve_real_cluster)
 
 
-def main():
-    import jax
-    cfg = get_smoke_config("qwen3-moe-30b-a3b")
-    params = build_model(cfg).init(jax.random.PRNGKey(0))
+def _requests(cfg, rng, n=12, system=None):
+    reqs = []
+    for i in range(n):
+        toks = rng.integers(0, cfg.vocab_size,
+                            int(rng.integers(8, 40))).tolist()
+        if system is not None:
+            toks = list(system) + toks[:12]
+        reqs.append(Request(
+            req_id=i, prompt_len=len(toks),
+            max_new_tokens=int(rng.integers(4, 10)),
+            arrival_time=0.05 * i, prompt_tokens=toks))
+    return reqs
 
-    ecfg = PagedEngineConfig(page_size=8, n_pages=32, max_blocks_per_req=8,
-                             max_batch=4, token_budget=16,
-                             chunk_buckets=(8, 16))
-    runner = PagedModelRunner(cfg, params, ecfg, n_sources=2)
+
+def _serve(cfg, params, runner, ecfg, reqs):
     engines = [PagedRealEngine(i, cfg, params, ecfg, runner=runner,
                                n_sources=2) for i in range(2)]
-
-    rng = np.random.default_rng(0)
-    reqs = []
-    for i in range(12):
-        plen = int(rng.integers(8, 40))
-        reqs.append(Request(
-            req_id=i, prompt_len=plen,
-            max_new_tokens=int(rng.integers(4, 10)),
-            arrival_time=0.05 * i,
-            prompt_tokens=rng.integers(0, cfg.vocab_size, plen).tolist()))
-
     res = serve_real_cluster(
         reqs, engines, cluster_cfg=RealClusterConfig(window_tokens=300))
+    for e in engines:
+        e.pool.check_invariants()
+    return res, engines
 
+
+def _report(reqs, engines, res):
     done = [r for r in reqs if r.state is RequestState.FINISHED
             and not r.error]
     print(f"served {len(done)}/{len(reqs)} requests on {len(engines)} "
@@ -55,9 +63,54 @@ def main():
     print(f"requests per engine: {res.signals['per_engine']}")
     print(f"mean ttft {res.mean_ttft:.2f}s  mean e2e {res.mean_e2e:.2f}s "
           f"(virtual time)")
-    for e in engines:
-        e.pool.check_invariants()
+
+
+def main(shared_prefix: bool = False):
+    import jax
+    cfg = get_smoke_config("qwen3-moe-30b-a3b")
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+
+    ecfg = PagedEngineConfig(page_size=8, n_pages=32, max_blocks_per_req=8,
+                             max_batch=4, token_budget=16,
+                             chunk_buckets=(8, 16))
+    runner = PagedModelRunner(cfg, params, ecfg, n_sources=2)
+
+    if not shared_prefix:
+        reqs = _requests(cfg, np.random.default_rng(0))
+        res, engines = _serve(cfg, params, runner, ecfg, reqs)
+        _report(reqs, engines, res)
+        return
+
+    # shared-system-prompt workload, sharing on vs off on the same stream
+    system = np.random.default_rng(7).integers(0, cfg.vocab_size, 24)
+    mk = lambda: _requests(cfg, np.random.default_rng(0), system=system)
+    res_off, eng_off = _serve(cfg, params, runner, ecfg, reqs_off := mk())
+    shared_cfg = dataclasses.replace(ecfg, prefix_sharing=True)
+    res_on, eng_on = _serve(cfg, params, runner, shared_cfg,
+                            reqs_on := mk())
+
+    print("== sharing OFF ==")
+    _report(reqs_off, eng_off, res_off)
+    print("== sharing ON (ref-counted prefix cache + COW) ==")
+    _report(reqs_on, eng_on, res_on)
+    identical = all(a.output_tokens == b.output_tokens
+                    for a, b in zip(reqs_off, reqs_on))
+    saved = res_off.signals["pages_allocated"] \
+        - res_on.signals["pages_allocated"]
+    print(f"bit-identical outputs: {identical}")
+    print(f"physical pages saved: {saved} "
+          f"({res_on.signals['pages_allocated']} vs "
+          f"{res_off.signals['pages_allocated']})")
+    print(f"prefill tokens skipped via cache: "
+          f"{res_on.signals['prefix_hit_tokens']}  "
+          f"cow copies: {res_on.signals['cow_copies']}")
+    assert identical and saved > 0
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--shared-prefix", action="store_true",
+                    help="shared-system-prompt workload with the "
+                         "prefix-sharing allocator, vs a no-sharing run")
+    main(shared_prefix=ap.parse_args().shared_prefix)

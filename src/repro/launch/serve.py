@@ -26,7 +26,13 @@ def main():
     ap.add_argument("--paged", action="store_true",
                     help="with --real: use the paged KV runtime "
                          "(block-table decode, chunked prefill, preemption)")
+    ap.add_argument("--shared-prefix", action="store_true",
+                    help="with --real --paged: shared-system-prompt "
+                         "workload on the prefix-sharing allocator "
+                         "(ref-counted pages + COW), vs a no-sharing run")
     args = ap.parse_args()
+    if args.shared_prefix and not (args.real and args.paged):
+        ap.error("--shared-prefix requires --real --paged")
 
     if args.real:
         import os
@@ -36,9 +42,10 @@ def main():
         sys.path.insert(0, root)   # examples/ lives at the repo root
         if args.paged:
             from examples.serve_moe_paged import main as real_main
+            real_main(shared_prefix=args.shared_prefix)
         else:
             from examples.serve_moe import main as real_main
-        real_main()
+            real_main()
         return
 
     from repro.serving import PAPER_SYSTEMS, simulate

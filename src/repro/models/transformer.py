@@ -185,6 +185,20 @@ def init_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int):
             for j in range(len(descs))}
 
 
+def copy_pages(pages, copies):
+    """Apply copy-on-write page copies to the physical pool: row ``dst``
+    := row ``src`` for every (src, dst) pair, across every super-block
+    position and k/v array. One vectorized gather-then-scatter, so a src
+    page recycled as a later dst within the same batch still contributes
+    its pre-batch contents.
+    """
+    if not copies:
+        return pages
+    src = jnp.asarray([s for s, _ in copies], jnp.int32)
+    dst = jnp.asarray([d for _, d in copies], jnp.int32)
+    return jax.tree.map(lambda a: a.at[:, dst].set(a[:, src]), pages)
+
+
 # ------------------------------------------------------------------ attention
 def _quantize_kv(t):
     """(B, S, H, hd) -> (int8 values, (B, S, H) fp32 scales)."""

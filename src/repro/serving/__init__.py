@@ -1,7 +1,8 @@
 from repro.serving.costmodel import CostModelConfig, EngineCostModel
 from repro.serving.engine import DPEngine, EngineConfig
 from repro.serving.kvcache import BlockPool, SlotAllocator
-from repro.serving.paged import GARBAGE_PAGE, PagedBlockAllocator
+from repro.serving.paged import (GARBAGE_PAGE, PagedBlockAllocator,
+                                 SharedPagedAllocator)
 from repro.serving.paged_engine import (PagedEngineConfig, PagedModelRunner,
                                         PagedRealEngine)
 from repro.serving.real_cluster import RealClusterConfig, serve_real_cluster
@@ -12,7 +13,8 @@ from repro.serving.simulator import (PAPER_SYSTEMS, SimResult, SystemConfig,
 
 __all__ = ["CostModelConfig", "EngineCostModel", "DPEngine", "EngineConfig",
            "BlockPool", "SlotAllocator", "GARBAGE_PAGE",
-           "PagedBlockAllocator", "PagedEngineConfig", "PagedModelRunner",
+           "PagedBlockAllocator", "SharedPagedAllocator",
+           "PagedEngineConfig", "PagedModelRunner",
            "PagedRealEngine", "RealClusterConfig", "serve_real_cluster",
            "Request", "RequestState", "SourceExpertTraffic", "PAPER_SYSTEMS",
            "SimResult", "SystemConfig", "simulate"]

@@ -16,7 +16,9 @@ import numpy as np
 from repro.core.queue_policy import QueueConfig, order_queue, order_queue_fcfs
 from repro.core.traces import EngineTrace
 from repro.serving.costmodel import EngineCostModel
-from repro.serving.engine_util import select_preemption_victim
+from repro.serving.engine_util import (grow_with_cow, match_prefix_on_admit,
+                                       release_prefix_match,
+                                       select_preemption_victim)
 from repro.serving.kvcache import BlockPool
 from repro.serving.request import Request, RequestState
 from repro.serving.routing_sim import SourceExpertTraffic
@@ -30,6 +32,10 @@ class EngineConfig:
     kv_block: int = 16
     queue_policy: str = "sjf_aging"   # or "fcfs" (vLLM baseline)
     theta_age_s: float = 5.0
+    # ref-counted prefix cache (needs requests with prompt_tokens chains);
+    # uses the SAME SharedPagedAllocator as the real paged engine, so
+    # Algorithm 1 sees identical shared-aware kv_usage in sim and real
+    prefix_sharing: bool = False
 
 
 class DPEngine:
@@ -42,7 +48,13 @@ class DPEngine:
         self.cost = cost or EngineCostModel()
         self.traffic = traffic
         self.top_k = top_k
-        self.pool = BlockPool(cfg.kv_tokens, cfg.kv_block)
+        if cfg.prefix_sharing:
+            from repro.serving.paged import SharedPagedAllocator
+            self.pool = SharedPagedAllocator(
+                max(cfg.kv_tokens // cfg.kv_block, 1), cfg.kv_block)
+        else:
+            self.pool = BlockPool(cfg.kv_tokens, cfg.kv_block)
+        self.prefix_hit_tokens = 0
         self.waiting: List[Request] = []
         self.running: List[Request] = []
         self.finished: List[Request] = []
@@ -89,11 +101,16 @@ class DPEngine:
         for r in self.waiting:
             if len(self.running) + len(admitted) >= self.cfg.max_running:
                 break
+            matched = match_prefix_on_admit(self.pool, r) \
+                if self.cfg.prefix_sharing else 0
             first_chunk = min(r.remaining_prefill, self.cfg.token_budget)
             if self.pool.allocate(r.req_id, r.context_len + first_chunk):
+                self.prefix_hit_tokens += r.prefill_done if matched else 0
                 r.state = RequestState.RUNNING
                 admitted.append(r)
             else:
+                if matched:
+                    release_prefix_match(self.pool, r)
                 break  # FIFO-in-priority-order admission (no bypass)
         for r in admitted:
             self.waiting.remove(r)
@@ -114,6 +131,18 @@ class DPEngine:
         self.waiting.append(victim)
         return True
 
+    def _grow(self, r: Request, need_tokens: int, write_lo: int,
+              write_hi: int) -> bool:
+        """Back the next write through the shared engine_util path:
+        allocate blocks and (under sharing) apply copy-on-write
+        *accounting* for tokens [write_lo, write_hi) — the simulator has
+        no physical pages, but the COW allocation must hit the books
+        identically to the real plane. False -> stall."""
+        return grow_with_cow(
+            self.pool, r, need_tokens, write_lo, write_hi,
+            sharing=self.cfg.prefix_sharing,
+            preempt_one=lambda req: self._preempt_one(protect=req))
+
     # ---- one continuous-batching step -------------------------------------
     def step(self, now: float) -> Tuple[float, Optional[np.ndarray], Dict]:
         """Returns (duration_s, routed_counts (L, E) or None, step_info)."""
@@ -131,10 +160,12 @@ class DPEngine:
             if r.state is RequestState.PREEMPTED:  # evicted for an earlier lane
                 decode_reqs.remove(r)
                 continue
-            ok = self.pool.allocate(r.req_id, r.context_len + 1)
-            while not ok and self._preempt_one(protect=r):
-                ok = self.pool.allocate(r.req_id, r.context_len + 1)
-            if not ok:
+            # write window mirrors the real plane: the token written this
+            # step sits at context_len - 1 (the newest sampled token is
+            # not yet stored); allocation keeps the sim's legacy
+            # context_len + 1 reservation convention
+            if not self._grow(r, r.context_len + 1, r.context_len - 1,
+                              r.context_len):
                 decode_reqs.remove(r)
                 stalled += 1
         self._stalled_last = stalled
@@ -149,11 +180,27 @@ class DPEngine:
         for r in prefill_reqs:
             if budget <= 0:
                 break
-            chunk = min(r.remaining_prefill, budget)
-            if not self.pool.allocate(r.req_id, r.prefill_done + chunk):
+            if r.state is RequestState.PREEMPTED:
                 continue
+            chunk = min(r.remaining_prefill, budget)
+            if self.cfg.prefix_sharing:
+                # sharing mirrors the paged real engine: prefill growth may
+                # preempt (same trace behavior under KV pressure, so
+                # Algorithm 1 sees consistent sim/real signals)
+                if not self._grow(r, r.prefill_done + chunk, r.prefill_done,
+                                  r.prefill_done + chunk):
+                    continue
+            elif not self.pool.allocate(r.req_id, r.prefill_done + chunk):
+                continue       # legacy sim path: skip, never preempt
             prefill_work.append((r, chunk))
             budget -= chunk
+
+        # prefill-side eviction (sharing) may have reclaimed lanes that
+        # were queued earlier in this step
+        decode_reqs = [r for r in decode_reqs
+                       if r.state is not RequestState.PREEMPTED]
+        prefill_work = [(r, c) for r, c in prefill_work
+                        if r.state is not RequestState.PREEMPTED]
 
         n_prefill = sum(c for _, c in prefill_work)
         n_decode = len(decode_reqs)
@@ -167,6 +214,9 @@ class DPEngine:
         # ---- apply step effects
         for r, chunk in prefill_work:
             r.prefill_done += chunk
+            if self.cfg.prefix_sharing and r.prompt_tokens:
+                self.pool.register_prefix(r.req_id,
+                                          r.prompt_tokens[:r.prefill_done])
             if r.remaining_prefill == 0:
                 # last prefill chunk emits the first token at step end
                 r.generated = 1

@@ -2,7 +2,8 @@
 
 Centralised so the three engines cannot silently diverge on: MoE dispatch-
 mode pinning inside jit traces, (B, A) stats-window draining for the
-coordinator, and preemption victim selection.
+coordinator, preemption victim selection, and the prefix-sharing admission
+/ allocate+COW growth steps.
 """
 from __future__ import annotations
 
@@ -37,6 +38,50 @@ def drain_window_stats(stats_log: List[dict]):
     A = sum(s["source_expert"] for s in stats_log)
     stats_log.clear()
     return np.asarray(B), np.asarray(A)
+
+
+def match_prefix_on_admit(pool, req: Request) -> int:
+    """Prefix-cache admission step shared by DPEngine and PagedRealEngine:
+    attach the longest cached prefix and skip prefill past it — always
+    leaving at least the last prompt token to recompute, because its
+    logits seed the first sampled token. Returns the matched token count
+    (0 when the request resumed mid-prefill or carries no tokens)."""
+    if req.prefill_done != 0 or not req.prompt_tokens:
+        return 0
+    matched = pool.match_prefix(req.req_id, req.prompt_tokens)
+    req.prefill_done = min(matched, req.prompt_len - 1)
+    return matched
+
+
+def release_prefix_match(pool, req: Request) -> None:
+    """Undo a match when admission fails afterwards: a request sitting in
+    the waiting queue must not pin shared pages."""
+    pool.free(req.req_id)
+    req.prefill_done = 0
+
+
+def grow_with_cow(pool, req: Request, need_tokens: int, write_lo: int,
+                  write_hi: int, *, sharing: bool, preempt_one,
+                  apply_copies=None) -> bool:
+    """Back the next KV write, identically for the real and simulated
+    engines: allocate pages to cover ``need_tokens``, then (under sharing)
+    copy-on-write-protect tokens [write_lo, write_hi). Both stages preempt
+    peers under pressure via ``preempt_one(req)``. ``apply_copies``
+    receives the physical (src, dst) page pairs — None for the simulator,
+    which only needs the accounting. False means the caller must stall."""
+    ok = pool.allocate(req.req_id, need_tokens)
+    while not ok and preempt_one(req):
+        ok = pool.allocate(req.req_id, need_tokens)
+    if not ok or not sharing:
+        return ok
+    cw = pool.prepare_write(req.req_id, write_lo, write_hi)
+    while cw is None and preempt_one(req):
+        cw = pool.prepare_write(req.req_id, write_lo, write_hi)
+    if cw is None:
+        return False
+    if cw and apply_copies is not None:
+        apply_copies(cw)
+    return True
 
 
 def select_preemption_victim(running: List[Request],

@@ -16,6 +16,9 @@ class BlockPool:
         self.total_blocks = max(total_tokens // block_size, 1)
         self.free_blocks = self.total_blocks
         self._held: Dict[int, int] = {}   # req_id -> blocks held
+        # cumulative physical allocations (prefix-sharing benches compare
+        # this across sharing on/off runs)
+        self.stat_blocks_allocated = 0
 
     @staticmethod
     def blocks_for(tokens: int, block_size: int) -> int:
@@ -35,6 +38,7 @@ class BlockPool:
         if need > 0:
             self.free_blocks -= need
             self._held[req_id] = self._held.get(req_id, 0) + need
+            self.stat_blocks_allocated += need
         return True
 
     def free(self, req_id: int) -> None:

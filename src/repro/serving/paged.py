@@ -7,6 +7,13 @@ accounting invariant — ``free_blocks == len(free page ids)`` — makes the
 scheduler's ``kv_usage`` signal the *actual* allocator state of the data
 plane, not a parallel estimate.
 
+``SharedPagedAllocator`` adds prefix sharing on top: per-page refcounts, a
+hash-indexed full-page prefix cache (keyed on token-id chains), and
+copy-on-write so common prompt prefixes occupy physical pages once. Under
+sharing, ``free_blocks`` counts free *plus reclaimable cached* pages —
+still the truthful capacity signal, because cached pages are evictable on
+demand.
+
 Page id 0 is reserved as the garbage page: it is never handed out, and the
 model's masked writes (chunk padding, inactive decode lanes) land there
 (see ``models/transformer.init_paged_cache``). Physical arrays therefore
@@ -14,7 +21,8 @@ have ``n_pages + 1`` rows for ``n_pages`` usable pages.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -36,18 +44,25 @@ class PagedBlockAllocator(BlockPool):
 
     # ---- allocation -----------------------------------------------------
     def allocate(self, req_id: int, tokens: int) -> bool:
-        """Grow req's block table to cover ``tokens`` total. False if OOM."""
+        """Grow req's block table to cover ``tokens`` total. False if OOM.
+
+        Atomic on failure: the availability check precedes every mutation,
+        so a False return leaves ``_free_ids``, ``tables`` and the
+        BlockPool books untouched (asserted — partial-OOM must not leak)."""
         held = len(self.tables.get(req_id, []))
         need = self.blocks_for(tokens, self.block_size) - held
         if need <= 0:
             return True
         if need > len(self._free_ids):
             return False
+        pre_free = len(self._free_ids)
         pages = [self._free_ids.pop() for _ in range(need)]
+        assert len(pages) == need and len(self._free_ids) == pre_free - need
         self.tables.setdefault(req_id, []).extend(pages)
         # mirror into the BlockPool books (kv_usage reads these)
         self.free_blocks -= need
         self._held[req_id] = self._held.get(req_id, 0) + need
+        self.stat_blocks_allocated += need
         return True
 
     def free(self, req_id: int) -> None:
@@ -81,3 +96,220 @@ class PagedBlockAllocator(BlockPool):
         assert len(held) + len(self._free_ids) == self.n_pages
         for rid, t in self.tables.items():
             assert self._held.get(rid, 0) == len(t)
+
+
+class SharedPagedAllocator(PagedBlockAllocator):
+    """Prefix-sharing paged allocator: ref-counted pages + COW block tables.
+
+    The vLLM/SGLang prefix-caching design, kept truthful for Algorithm 1:
+
+    * every *full* page a request prefills is registered in a hash index
+      under the chain key of the token prefix it completes (nested-tuple
+      chains — structural equality, so no hash-collision aliasing);
+    * :meth:`match_prefix` (called at admission) attaches the longest chain
+      of cached pages to the new request (refcount += 1 per page), so
+      prefill starts at the first unshared token;
+    * indexed pages are immutable. :meth:`prepare_write` must be called
+      before any KV write: pages that are shared (refcount > 1) or indexed
+      are replaced by private copies (copy-on-write) and the (src, dst)
+      pairs are returned for the engine to apply to the physical arrays;
+    * a page whose refcount drops to 0 stays cached (LRU-reclaimable) when
+      indexed, so requests arriving after the owner finished still hit.
+
+    Shared-aware accounting: ``free_blocks`` (hence ``kv_usage``) counts
+    each physical page once — free and cached pages are both capacity,
+    because cached pages are evicted on demand by ``allocate``/COW.
+    """
+
+    def __init__(self, n_pages: int, page_size: int = 16):
+        super().__init__(n_pages, page_size)
+        self.refcount: Dict[int, int] = {}        # live pages only (>= 1)
+        self._index: Dict[tuple, int] = {}        # prefix chain -> page id
+        self._page_key: Dict[int, tuple] = {}     # reverse map (indexed pages)
+        # refcount-0 indexed pages, insertion order == LRU eviction order
+        self._cached: "OrderedDict[int, None]" = OrderedDict()
+        self._registered: Dict[int, int] = {}     # req -> leading pages indexed
+        self._keys_cache: Dict[int, List[tuple]] = {}  # req -> chain memo
+        self.stat_hit_pages = 0
+        self.stat_cow_copies = 0
+        self.stat_evictions = 0
+
+    # ---- chain keys ------------------------------------------------------
+    def _chain_keys_for(self, req_id: int, tokens: Sequence) -> List[tuple]:
+        """One key per full page of ``tokens``; key i commits to the whole
+        prefix through page i via nested tuples (structural equality — no
+        collision risk). Memoized incrementally per request: a request's
+        prompt is immutable for its lifetime, and register runs once per
+        chunk, so without the memo every call would rebuild (and rehash)
+        the whole chain. Cleared on :meth:`free`."""
+        ps = self.block_size
+        keys = self._keys_cache.setdefault(req_id, [])
+        want = len(tokens) // ps
+        prev: Optional[tuple] = keys[-1] if keys else None
+        for i in range(len(keys), want):
+            prev = (prev, tuple(tokens[i * ps:(i + 1) * ps]))
+            keys.append(prev)
+        return keys[:want]
+
+    # ---- physical page sourcing -----------------------------------------
+    def _take_page(self) -> int:
+        """Pop a physical page: the free list first, else evict the LRU
+        cached page (dropping its index entry). Caller updates books."""
+        if self._free_ids:
+            return self._free_ids.pop()
+        p, _ = self._cached.popitem(last=False)
+        del self._index[self._page_key.pop(p)]
+        self.stat_evictions += 1
+        return p
+
+    def _unref(self, p: int) -> None:
+        self.refcount[p] -= 1
+        if self.refcount[p] == 0:
+            del self.refcount[p]
+            if p in self._page_key:       # keep content reusable (LRU cache)
+                self._cached[p] = None
+            else:
+                self._free_ids.append(p)
+            self.free_blocks += 1
+
+    # ---- allocation ------------------------------------------------------
+    def allocate(self, req_id: int, tokens: int) -> bool:
+        """Grow req's table to cover ``tokens`` total; may evict cached
+        pages. Atomic on failure (books untouched when returning False)."""
+        held = len(self.tables.get(req_id, []))
+        need = self.blocks_for(tokens, self.block_size) - held
+        if need <= 0:
+            return True
+        if need > self.free_blocks:       # free list + reclaimable cache
+            return False
+        pages = []
+        for _ in range(need):
+            p = self._take_page()
+            self.refcount[p] = 1
+            pages.append(p)
+        self.tables.setdefault(req_id, []).extend(pages)
+        self.free_blocks -= need
+        self._held[req_id] = self._held.get(req_id, 0) + need
+        self.stat_blocks_allocated += need
+        return True
+
+    def free(self, req_id: int) -> None:
+        """Detach the request: decrement refcounts; pages still referenced
+        by peers stay live, indexed pages go to the reclaimable cache."""
+        for p in self.tables.pop(req_id, []):
+            self._unref(p)
+        self._held.pop(req_id, None)
+        self._registered.pop(req_id, None)
+        self._keys_cache.pop(req_id, None)
+
+    # ---- prefix sharing --------------------------------------------------
+    def match_prefix(self, req_id: int, tokens: Sequence) -> int:
+        """Attach the longest chain of cached full pages covering a prefix
+        of ``tokens`` to ``req_id``'s (empty) block table. Returns the
+        matched token count (a multiple of page_size). The caller decides
+        how much prefill to skip — at least the last prompt token must be
+        recomputed so its logits can seed sampling."""
+        assert not self.tables.get(req_id), "match_prefix needs empty table"
+        table: List[int] = []
+        for key in self._chain_keys_for(req_id, tokens):
+            p = self._index.get(key)
+            if p is None:
+                break
+            if p in self._cached:          # revive a reclaimable page
+                del self._cached[p]
+                self.refcount[p] = 1
+                self.free_blocks -= 1
+            else:
+                self.refcount[p] += 1
+            table.append(p)
+        if table:
+            self.tables[req_id] = table
+            self._held[req_id] = len(table)
+            self._registered[req_id] = len(table)
+            self.stat_hit_pages += len(table)
+        return len(table) * self.block_size
+
+    def register_prefix(self, req_id: int, tokens: Sequence) -> None:
+        """Index ``req_id``'s full pages covering ``tokens`` (its prefilled
+        prompt prefix) so later arrivals can share them. First writer wins:
+        chains already indexed keep their existing page."""
+        table = self.tables.get(req_id, [])
+        keys = self._chain_keys_for(req_id, tokens)
+        upto = min(len(keys), len(table))
+        for i in range(self._registered.get(req_id, 0), upto):
+            key, p = keys[i], table[i]
+            if key not in self._index and p not in self._page_key:
+                self._index[key] = p
+                self._page_key[p] = key
+        self._registered[req_id] = max(self._registered.get(req_id, 0), upto)
+
+    def prepare_write(self, req_id: int, start_tok: int,
+                      end_tok: int) -> Optional[List[Tuple[int, int]]]:
+        """Copy-on-write ahead of a KV write into tokens [start_tok,
+        end_tok): every touched page that is shared (refcount > 1) or
+        indexed (immutable cached content) is swapped for a private copy.
+        Returns the (src, dst) page pairs the engine must apply to the
+        physical arrays, or None when the pool cannot back the copies
+        (caller preempts or stalls). Atomic on failure."""
+        if end_tok <= start_tok:
+            return []
+        table = self.tables.get(req_id, [])
+        lo = start_tok // self.block_size
+        hi = min(-(-end_tok // self.block_size), len(table))
+        idxs = [i for i in range(lo, hi)
+                if self.refcount[table[i]] > 1
+                or table[i] in self._page_key]
+        if not idxs:
+            return []
+        if len(idxs) > self.free_blocks:
+            return None
+        copies: List[Tuple[int, int]] = []
+        for i in idxs:
+            src = table[i]
+            dst = self._take_page()
+            self.refcount[dst] = 1
+            self.free_blocks -= 1
+            self._unref(src)      # indexed sole-owner src -> cache (net 0)
+            table[i] = dst
+            copies.append((src, dst))
+        self.stat_blocks_allocated += len(copies)
+        self.stat_cow_copies += len(copies)
+        return copies
+
+    # ---- introspection ---------------------------------------------------
+    @property
+    def n_cached(self) -> int:
+        return len(self._cached)
+
+    @property
+    def pages_in_use(self) -> int:
+        """Distinct physical pages currently backing live block tables."""
+        return self.n_pages - len(self._free_ids) - len(self._cached)
+
+    def check_invariants(self) -> None:
+        """Sharing-aware books must balance (test hook): every physical
+        page is in exactly one of {free list, reclaimable cache, live
+        refcounted set}; refcounts equal table multiplicity; kv_usage
+        counts physical pages once."""
+        assert self.free_blocks == len(self._free_ids) + len(self._cached), \
+            (self.free_blocks, len(self._free_ids), len(self._cached))
+        counts: Dict[int, int] = {}
+        for t in self.tables.values():
+            for p in t:
+                counts[p] = counts.get(p, 0) + 1
+        assert counts == self.refcount, "refcount != table multiplicity"
+        assert all(c >= 1 for c in self.refcount.values())
+        fs, cs, hs = set(self._free_ids), set(self._cached), set(counts)
+        assert GARBAGE_PAGE not in fs | cs | hs, "garbage page handed out"
+        assert not (fs & cs) and not (fs & hs) and not (cs & hs), \
+            "page in two ownership states"
+        assert len(self._free_ids) == len(fs), "free-list duplicate"
+        assert len(fs) + len(cs) + len(hs) == self.n_pages
+        for rid, t in self.tables.items():
+            assert self._held.get(rid, 0) == len(t)
+        # index <-> page bijection; cached pages are always indexed
+        assert sorted(self._page_key) == sorted(self._index.values())
+        for key, p in self._index.items():
+            assert self._page_key[p] == key
+        assert cs <= set(self._page_key)
+        assert 0.0 <= self.usage <= 1.0

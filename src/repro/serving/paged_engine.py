@@ -28,9 +28,12 @@ from repro.core.queue_policy import QueueConfig, order_queue
 from repro.core.traces import EngineTrace
 from repro.models import moe as moe_mod
 from repro.models import transformer as tfm
-from repro.serving.engine_util import (drain_window_stats, pin_dispatch_mode,
+from repro.serving.engine_util import (drain_window_stats, grow_with_cow,
+                                       match_prefix_on_admit,
+                                       pin_dispatch_mode,
+                                       release_prefix_match,
                                        select_preemption_victim)
-from repro.serving.paged import PagedBlockAllocator
+from repro.serving.paged import PagedBlockAllocator, SharedPagedAllocator
 from repro.serving.request import Request, RequestState
 
 
@@ -45,6 +48,7 @@ class PagedEngineConfig:
     theta_age_s: float = 5.0
     attn_backend: str = "auto"        # auto | pallas | xla
     interpret: bool = False           # Pallas interpret mode (CPU tests)
+    prefix_sharing: bool = False      # ref-counted prefix cache + COW
 
     @property
     def max_len(self) -> int:
@@ -137,9 +141,14 @@ class PagedRealEngine:
             "engine/runner page_size mismatch"
         assert self.ecfg.n_pages <= self.runner.ecfg.n_pages, \
             "engine pool larger than the runner's physical page arrays"
-        self.pool = PagedBlockAllocator(self.ecfg.n_pages,
-                                        self.ecfg.page_size)
+        self.sharing = self.ecfg.prefix_sharing
+        self.pool = (SharedPagedAllocator(self.ecfg.n_pages,
+                                          self.ecfg.page_size)
+                     if self.sharing else
+                     PagedBlockAllocator(self.ecfg.n_pages,
+                                         self.ecfg.page_size))
         self.pages = self.runner.init_pages()
+        self.prefix_hit_tokens = 0        # prefill tokens skipped via cache
         self.waiting: List[Request] = []
         self.running: List[Request] = []
         self.finished: List[Request] = []
@@ -189,11 +198,16 @@ class PagedRealEngine:
         for r in self.waiting:
             if len(self.running) + len(admitted) >= self.ecfg.max_batch:
                 break
+            matched = match_prefix_on_admit(self.pool, r) \
+                if self.sharing else 0
             first = min(r.remaining_prefill, self.ecfg.token_budget)
             if self.pool.allocate(r.req_id, r.prefill_done + first):
+                self.prefix_hit_tokens += r.prefill_done if matched else 0
                 r.state = RequestState.RUNNING
                 admitted.append(r)
             else:
+                if matched:
+                    release_prefix_match(self.pool, r)
                 break   # FIFO-in-priority-order admission (no bypass)
         for r in admitted:
             self.waiting.remove(r)
@@ -214,6 +228,19 @@ class PagedRealEngine:
         victim.state = RequestState.PREEMPTED
         self.waiting.append(victim)
         return True
+
+    def _apply_cow(self, copies) -> None:
+        self.pages = tfm.copy_pages(self.pages, copies)
+
+    def _grow(self, r: Request, need_tokens: int, write_lo: int,
+              write_hi: int) -> bool:
+        """Allocate + COW-protect the next write (shared engine_util path);
+        False means the caller must stall the lane this step."""
+        return grow_with_cow(
+            self.pool, r, need_tokens, write_lo, write_hi,
+            sharing=self.sharing,
+            preempt_one=lambda req: self._preempt_one(protect=req),
+            apply_copies=self._apply_cow)
 
     def _finish(self, r: Request, now: float) -> None:
         r.state = RequestState.FINISHED
@@ -239,10 +266,7 @@ class PagedRealEngine:
                 decode_reqs.remove(r)
                 continue
             need = self._kv_len(r) + 1
-            ok = self.pool.allocate(r.req_id, need)
-            while not ok and self._preempt_one(protect=r):
-                ok = self.pool.allocate(r.req_id, need)
-            if not ok:
+            if not self._grow(r, need, need - 1, need):
                 decode_reqs.remove(r)
                 stalled += 1
         self._stalled_last = stalled
@@ -261,10 +285,7 @@ class PagedRealEngine:
             chunk = min(r.remaining_prefill, budget,
                         self.ecfg.chunk_buckets[-1])
             need = r.prefill_done + chunk
-            ok = self.pool.allocate(r.req_id, need)
-            while not ok and self._preempt_one(protect=r):
-                ok = self.pool.allocate(r.req_id, need)
-            if not ok:
+            if not self._grow(r, need, r.prefill_done, need):
                 continue
             prefill_work.append((r, chunk))
             budget -= chunk
@@ -300,6 +321,10 @@ class PagedRealEngine:
             jnp.full((1,), self.engine_id, jnp.int32))
         r.prefill_done += chunk
         self.total_prefill_tokens += chunk
+        if self.sharing:
+            # full pages just completed become shareable (first writer wins)
+            self.pool.register_prefix(r.req_id,
+                                      r.prompt_tokens[:r.prefill_done])
         if stats is not None:
             self.stats_log.append(jax.tree.map(np.asarray, stats))
         if r.remaining_prefill == 0:

@@ -138,6 +138,15 @@ def serve_real_cluster(requests: List[Request], engines, *,
         "stalled": sum(getattr(e, "n_stalled_total", 0) for e in engines),
         "rejected": sum(1 for r in requests if r.error),
         "kv_peak": kv_peak,
+        # prefix-sharing telemetry (0 when sharing is off / plain pools)
+        "prefix_hit_tokens": sum(getattr(e, "prefix_hit_tokens", 0)
+                                 for e in engines),
+        "pages_allocated": sum(
+            getattr(getattr(e, "pool", None), "stat_blocks_allocated", 0)
+            for e in engines),
+        "cow_copies": sum(
+            getattr(getattr(e, "pool", None), "stat_cow_copies", 0)
+            for e in engines),
         "decisions": getattr(sched, "decisions", {}),
         "per_engine": {e.engine_id: sum(1 for r in requests
                                         if r.engine_id == e.engine_id

@@ -1,0 +1,19 @@
+"""Shared fixtures for the serving/paged test files.
+
+``tiny_model`` is session-scoped so test_paged.py and
+test_prefix_sharing.py share one set of params (and engines built on one
+runner share jit compiles) instead of recompiling per file.
+"""
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def tiny_model():
+    from repro.configs import get_smoke_config
+    from repro.configs.base import reduced
+    from repro.models import build_model
+    cfg = get_smoke_config("qwen3-moe-30b-a3b")
+    cfg = reduced(cfg, n_layers=2)        # halve compile time for tests
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    return cfg, params

@@ -117,17 +117,7 @@ def test_paged_allocator_accounting_matches_blockpool():
 
 
 # ------------------------------------------------------------ engine fixtures
-@pytest.fixture(scope="module")
-def tiny_model():
-    from repro.configs import get_smoke_config
-    from repro.configs.base import reduced
-    from repro.models import build_model
-    cfg = get_smoke_config("qwen3-moe-30b-a3b")
-    cfg = reduced(cfg, n_layers=2)        # halve compile time for tests
-    params = build_model(cfg).init(jax.random.PRNGKey(0))
-    return cfg, params
-
-
+# (tiny_model comes session-scoped from conftest.py)
 def _mk_requests(cfg, n, *, prompt_lens, max_new=5, seed=0):
     rng = np.random.default_rng(seed)
     reqs = []
@@ -234,6 +224,57 @@ def test_preemption_resume_determinism(tiny_model):
     for a, b in zip(reqs1, reqs2):
         assert a.output_tokens == b.output_tokens, \
             f"req {a.req_id} diverged after eviction/recompute"
+    e2.pool.check_invariants()
+    assert e2.pool.usage == 0.0
+
+
+def test_preemption_does_not_reclaim_shared_pages(tiny_model):
+    """Preemption suite × prefix sharing: evicting a request that shares
+    pages must only drop its own references — peers keep decoding on the
+    same physical pages (the per-step invariant check would trip on a
+    double-free), and the victim's resume re-matches the cache and stays
+    deterministic vs the unpressured shared run."""
+    cfg, params = tiny_model
+    roomy = PagedEngineConfig(page_size=8, n_pages=64, max_blocks_per_req=6,
+                              max_batch=4, token_budget=16,
+                              chunk_buckets=(8, 16), attn_backend="xla",
+                              prefix_sharing=True)
+    shared = list(np.random.default_rng(21).integers(0, cfg.vocab_size, 16))
+
+    def mk():
+        tails = [[7] * 1, [11] * 7, [13] * 3, [17] * 5]
+        return [Request(req_id=i, prompt_len=16 + len(t), max_new_tokens=6,
+                        arrival_time=0.001 * i,
+                        prompt_tokens=[int(x) for x in shared] + t)
+                for i, t in enumerate(tails)]
+
+    def drive(e, reqs):
+        for r in reqs:
+            e.enqueue(r, 0.0)
+        now = 0.0
+        for _ in range(400):
+            e.step(now)
+            e.pool.check_invariants()     # peers' pages never double-freed
+            now += 0.01
+            if not e.has_work:
+                break
+
+    e1 = PagedRealEngine(0, cfg, params, roomy, n_sources=1)
+    r1 = mk()
+    drive(e1, r1)
+    assert all(r.state is RequestState.FINISHED for r in r1)
+    assert sum(r.n_preemptions for r in r1) == 0
+
+    tight = dataclasses.replace(roomy, n_pages=7)
+    e2 = PagedRealEngine(0, cfg, params, tight, runner=e1.runner,
+                         n_sources=1)
+    r2 = mk()
+    drive(e2, r2)
+    assert all(r.state is RequestState.FINISHED for r in r2)
+    assert sum(r.n_preemptions for r in r2) > 0
+    for a, b in zip(r1, r2):
+        assert a.output_tokens == b.output_tokens, \
+            f"req {a.req_id} diverged after shared-page eviction"
     e2.pool.check_invariants()
     assert e2.pool.usage == 0.0
 
