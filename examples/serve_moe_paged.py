@@ -8,9 +8,12 @@ coordinator consumes REAL router statistics and migrates experts live.
 
 With ``--shared-prefix`` every request carries a common 24-token system
 prompt and the engines run the ``SharedPagedAllocator`` (ref-counted pages
-+ prefix cache + copy-on-write); the run is repeated with sharing off to
-show pages saved, prefill skipped and the TTFT delta — with bit-identical
-outputs.
++ radix-tree token-granular prefix cache + copy-on-write); the run is
+repeated with sharing off to show pages saved, prefill skipped and the
+TTFT delta — with bit-identical outputs. Under sharing the engines also
+ship radix prefix summaries on their traces, so Algorithm 1's
+prefix-affinity credit routes repeated prefixes to the engine already
+holding them (the ``affinity`` dispatch count in the report).
 
 PYTHONPATH=src python examples/serve_moe_paged.py [--shared-prefix]
 """
@@ -104,6 +107,9 @@ def main(shared_prefix: bool = False):
     print(f"prefill tokens skipped via cache: "
           f"{res_on.signals['prefix_hit_tokens']}  "
           f"cow copies: {res_on.signals['cow_copies']}")
+    print(f"affinity dispatches (prefix-holding engine picked): "
+          f"{res_on.signals['decisions']['affinity_path']}  "
+          f"per-engine hits: {res_on.signals['per_engine_prefix_hits']}")
     assert identical and saved > 0
 
 

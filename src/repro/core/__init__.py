@@ -20,7 +20,7 @@ from repro.core.profiler import ExpertProfiler
 from repro.core.queue_policy import QueueConfig, order_queue, order_queue_fcfs
 from repro.core.scheduler import (BaselineScheduler, GimbalScheduler,
                                   SchedulerConfig)
-from repro.core.traces import EngineTrace, TraceTable
+from repro.core.traces import EngineTrace, PrefixSummary, TraceTable
 
 __all__ = [
     "CoordinatorConfig", "GimbalCoordinator", "CalibrationResult",
@@ -29,5 +29,6 @@ __all__ = [
     "default_distance_matrix", "greedy_layer_placement", "layer_objective",
     "torus_distance_matrix", "total_objective", "ExpertProfiler",
     "QueueConfig", "order_queue", "order_queue_fcfs", "BaselineScheduler",
-    "GimbalScheduler", "SchedulerConfig", "EngineTrace", "TraceTable",
+    "GimbalScheduler", "SchedulerConfig", "EngineTrace", "PrefixSummary",
+    "TraceTable",
 ]

@@ -5,7 +5,15 @@ selection with compensation for dispatches made since the last trace refresh,
 and a CLOSE guard that falls back to ordered dispatch when scores are within
 noise (prevents oscillation on trace jitter).
 
-score_i = pre_rem_i + wait_i + comp_i + P_kv(kv_i) + P_moe(moe_i)
+score_i = (pre_rem_i - affinity_i) + wait_i + comp_i + P_kv(kv_i) + P_moe(moe_i)
+
+``affinity_i`` is the prefix-affinity credit: estimated cache-hit tokens
+for this request on engine i, read off the radix prefix summary each
+engine ships on its trace. It reduces pre_rem_i (a hit engine prefills
+fewer tokens), never overrides the HighKV protection path (which runs
+first), and inside the CLOSE band only replaces the arbitrary round-robin
+tiebreak — it cannot create or suppress a CLOSE verdict, so the
+anti-oscillation property is preserved.
 """
 from __future__ import annotations
 
@@ -32,6 +40,13 @@ class SchedulerConfig:
     # next trace arrives (its own prefill tokens + fixed decode allowance)
     comp_decode_allowance: float = 64.0
     comp_decay_s: float = 2.0            # compensation half-life (safety)
+    # prefix-affinity credit: estimated cache-hit tokens (read off the
+    # engines' radix prefix summaries) reduce that engine's pending-work
+    # score — routing a request to the engine already holding its prefix
+    # is backend-state-aware dispatch, the paper's coordination thesis
+    # applied to the KV cache. 0.0 disables the signal entirely and
+    # bit-reproduces affinity-free dispatch.
+    affinity_weight: float = 1.0
 
 
 class GimbalScheduler:
@@ -47,7 +62,7 @@ class GimbalScheduler:
         self._excluded: set = set()
         # per-decision telemetry for the benchmarks/ablation
         self.decisions = {"fallback": 0, "kv_path": 0, "score_path": 0,
-                          "close_path": 0}
+                          "close_path": 0, "affinity_path": 0}
 
     # ---- engine set management (elastic scaling / health) ------------
     def exclude(self, engine_id: int) -> None:
@@ -87,16 +102,43 @@ class GimbalScheduler:
     def _p_moe(self, moe: float) -> float:
         return self.cfg.moe_penalty_scale * moe
 
-    def score(self, t: EngineTrace, now: float) -> float:
-        return (t.remaining_prefill_tokens + t.waiting_prefill_tokens
+    def score(self, t: EngineTrace, now: float,
+              affinity_credit: float = 0.0) -> float:
+        """Pressure score; ``affinity_credit`` (estimated cache-hit tokens,
+        pre-weighted) reduces the remaining-prefill term — a request whose
+        prefix the engine already holds costs that engine fewer tokens."""
+        return (t.remaining_prefill_tokens - affinity_credit
+                + t.waiting_prefill_tokens
                 + self._compensation(t.engine_id, now)
                 + self._p_kv(t.kv_usage) + self._p_moe(t.moe_pressure))
+
+    def _affinity_credits(self, traces: Dict[int, EngineTrace],
+                          prompt_tokens) -> Optional[Dict[int, float]]:
+        """Per-engine prefix-affinity credit for this request, or None when
+        the signal is off / absent (no prompt ids, weight 0, no engine
+        advertises a prefix summary, or no summary matches). Capped at
+        prompt_len - 1: the last prompt token is always recomputed."""
+        if prompt_tokens is None or len(prompt_tokens) <= 1 \
+                or self.cfg.affinity_weight <= 0.0:
+            return None
+        cap = float(len(prompt_tokens) - 1)
+        credits = {}
+        for e, t in traces.items():
+            s = t.prefix_summary
+            est = s.estimate_hit_tokens(prompt_tokens) if s is not None else 0
+            credits[e] = self.cfg.affinity_weight * min(float(est), cap)
+        return credits if any(c > 0.0 for c in credits.values()) else None
 
     # ---- Algorithm 1 ----------------------------------------------------
     def _ordered_next(self, engines: List[int]) -> int:
         return engines[next(self._rr) % len(engines)]
 
-    def select_engine(self, prefill_tokens: float, now: float = 0.0) -> int:
+    def select_engine(self, prefill_tokens: float, now: float = 0.0,
+                      prompt_tokens=None) -> int:
+        """Pick the engine for a request. ``prompt_tokens`` (optional)
+        enables the prefix-affinity credit; omitting it — or zeroing
+        ``affinity_weight`` — reproduces affinity-free dispatch decision
+        for decision, including round-robin state consumption."""
         engines = self._engines()
         if not engines:
             raise RuntimeError("no healthy engines")
@@ -109,7 +151,9 @@ class GimbalScheduler:
             self._add_compensation(chosen, prefill_tokens, now)
             return chosen
 
-        # line 6-9: KV protection path
+        # line 6-9: KV protection path. Runs BEFORE affinity is even
+        # computed: a cache hit must never pull load onto an engine whose
+        # KV pool is the cluster's pressure point.
         kv = {e: t.kv_usage for e, t in traces.items()}
         e_min = min(engines, key=lambda e: (kv[e], e))
         e_max = max(engines, key=lambda e: (kv[e], -e))
@@ -119,23 +163,37 @@ class GimbalScheduler:
             self._add_compensation(e_min, prefill_tokens, now)
             return e_min
 
-        # line 10-12: pressure scores
+        # line 10-12: pressure scores (affinity-free: the CLOSE band must
+        # keep judging the jittery trace signals, so the credit can never
+        # manufacture or suppress a CLOSE verdict)
         scores = {e: self.score(traces[e], now) for e in engines}
         s_min = min(scores.values())
         s_max = max(scores.values())
+        credits = self._affinity_credits(traces, prompt_tokens)
 
-        # line 13-16: CLOSE guard -> ordered dispatch
+        # line 13-16: CLOSE guard. Within the band, affinity replaces the
+        # arbitrary round-robin pick with the cache-holding engine — a
+        # deterministic, sticky tiebreak, so no oscillation on jitter.
         band = max(self.cfg.close_abs,
                    self.cfg.close_rel * max(abs(s_max), 1.0),
                    0.05 * prefill_tokens)
         if s_max - s_min <= band:
-            self.decisions["close_path"] += 1
-            chosen = self._ordered_next(engines)
+            if credits is not None:
+                self.decisions["affinity_path"] += 1
+                c_max = max(credits.values())
+                chosen = min((e for e in engines if credits[e] == c_max),
+                             key=lambda e: (scores[e], kv[e], e))
+            else:
+                self.decisions["close_path"] += 1
+                chosen = self._ordered_next(engines)
             self._add_compensation(chosen, prefill_tokens, now)
             return chosen
 
-        # line 17: argmin by (score, kv, id)
+        # line 17: argmin by (score, kv, id), cache-hit credit included
+        # (score() is linear in the credit, so subtract in place)
         self.decisions["score_path"] += 1
+        if credits is not None:
+            scores = {e: scores[e] - credits[e] for e in engines}
         chosen = min(engines, key=lambda e: (scores[e], kv[e], e))
         self._add_compensation(chosen, prefill_tokens, now)
         return chosen
@@ -151,7 +209,8 @@ class BaselineScheduler:
         self._rr = itertools.count()
         self._inflight: Dict[int, int] = {}
 
-    def select_engine(self, prefill_tokens: float, now: float = 0.0) -> int:
+    def select_engine(self, prefill_tokens: float, now: float = 0.0,
+                      prompt_tokens=None) -> int:
         engines = self.traces.engine_ids
         if self.policy == "round_robin":
             return engines[next(self._rr) % len(engines)]

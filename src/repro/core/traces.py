@@ -11,7 +11,40 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, Optional
+from typing import Dict, Optional, Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefixSummary:
+    """Compact digest of one engine's prefix cache (the radix tree in
+    ``serving/paged.py``), shipped on every trace so Algorithm 1 can score
+    *cache affinity*: fingerprints of each distinct root-level first page
+    (or shorter leaf path, for trees shallower than one page) map to the
+    deepest matchable token depth beneath it. A handful of ints per
+    distinct cached system prompt — never the tokens themselves.
+
+    The estimate is intentionally one-sided cheap: a fingerprint hit may
+    overestimate (the query can diverge below the first page) and a query
+    shorter than every indexed first page estimates 0. Both are fine for a
+    scheduling *credit* — admission still calls ``match_prefix`` for the
+    exact token-granular attach, so correctness never depends on this.
+    """
+
+    block_size: int
+    entries: Dict[int, int] = dataclasses.field(default_factory=dict)
+    indexed_tokens: int = 0                 # total tokens in the tree
+
+    def estimate_hit_tokens(self, tokens: Sequence) -> int:
+        """Estimated cache-hit tokens were ``tokens`` dispatched to this
+        engine: deepest indexed depth under the longest fingerprinted
+        prefix of the first page, capped at the prompt length."""
+        if not self.entries or not tokens:
+            return 0
+        for n in range(min(self.block_size, len(tokens)), 0, -1):
+            depth = self.entries.get(hash(tuple(tokens[:n])), 0)
+            if depth:
+                return min(depth, len(tokens))
+        return 0
 
 
 @dataclasses.dataclass
@@ -29,6 +62,9 @@ class EngineTrace:
     n_stalled: int = 0                      # decode lanes stalled last step:
                                             # KV growth failed even after
                                             # preemption (hard KV pressure)
+    # radix prefix-cache digest (None when the engine doesn't share);
+    # treated as immutable, so copy() sharing the object is sound
+    prefix_summary: Optional[PrefixSummary] = None
     timestamp: float = 0.0
 
     def copy(self) -> "EngineTrace":

@@ -215,8 +215,12 @@ class DPEngine:
         for r, chunk in prefill_work:
             r.prefill_done += chunk
             if self.cfg.prefix_sharing and r.prompt_tokens:
-                self.pool.register_prefix(r.req_id,
-                                          r.prompt_tokens[:r.prefill_done])
+                # mirror the paged real engine: mid-life registration stops
+                # at the page boundary (indexing the in-progress partial
+                # page would COW on the next write); the token-granular
+                # tail + full prompt registers at finish
+                full = r.prefill_done - r.prefill_done % self.cfg.kv_block
+                self.pool.register_prefix(r.req_id, r.prompt_tokens[:full])
             if r.remaining_prefill == 0:
                 # last prefill chunk emits the first token at step end
                 r.generated = 1
@@ -249,6 +253,13 @@ class DPEngine:
         r.finish_time = t
         if r in self.running:
             self.running.remove(r)
+        if self.cfg.prefix_sharing and r.prompt_tokens:
+            # token-granular finish-time registration (the partial prompt
+            # tail page becomes matchable). The simulator has no sampled
+            # token ids, so only the prompt registers — decode-token
+            # caching is a real-plane-only gain; the allocator semantics
+            # and trace signals stay identical across planes.
+            self.pool.register_prefix(r.req_id, r.prompt_tokens)
         self.pool.free(r.req_id)
         self.finished.append(r)
 
@@ -265,6 +276,10 @@ class DPEngine:
             n_running=len(self.running),
             n_waiting=len(self.waiting),
             n_stalled=self._stalled_last,
+            # same prefix-affinity digest as the real paged engine, off
+            # the same allocator class — sim/real dispatch signals agree
+            prefix_summary=self.pool.prefix_summary()
+            if self.cfg.prefix_sharing else None,
             timestamp=now,
         )
 

@@ -42,10 +42,12 @@ def drain_window_stats(stats_log: List[dict]):
 
 def match_prefix_on_admit(pool, req: Request) -> int:
     """Prefix-cache admission step shared by DPEngine and PagedRealEngine:
-    attach the longest cached prefix and skip prefill past it — always
-    leaving at least the last prompt token to recompute, because its
-    logits seed the first sampled token. Returns the matched token count
-    (0 when the request resumed mid-prefill or carries no tokens)."""
+    attach the longest cached prefix — token-granular under the radix
+    index, so partial-page and mid-page hits count — and skip prefill past
+    it, always leaving at least the last prompt token to recompute,
+    because its logits seed the first sampled token. Returns the matched
+    token count (0 when the request resumed mid-prefill or carries no
+    tokens)."""
     if req.prefill_done != 0 or not req.prompt_tokens:
         return 0
     matched = pool.match_prefix(req.req_id, req.prompt_tokens)
@@ -55,8 +57,10 @@ def match_prefix_on_admit(pool, req: Request) -> int:
 
 def release_prefix_match(pool, req: Request) -> None:
     """Undo a match when admission fails afterwards: a request sitting in
-    the waiting queue must not pin shared pages."""
-    pool.free(req.req_id)
+    the waiting queue must not pin shared pages — nor count phantom
+    cache-hit tokens for prefill it never skipped (it will re-match on
+    every admission retry)."""
+    pool.release_match(req.req_id)
     req.prefill_done = 0
 
 

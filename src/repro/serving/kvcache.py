@@ -19,6 +19,14 @@ class BlockPool:
         # cumulative physical allocations (prefix-sharing benches compare
         # this across sharing on/off runs)
         self.stat_blocks_allocated = 0
+        # prefix-sharing telemetry, defined on EVERY pool (zero on plain
+        # ones) so cluster aggregation reads them directly instead of
+        # getattr-defaulting — a pool that "never shares" and a pool that
+        # silently lost the field must not look alike
+        self.stat_cow_copies = 0
+        self.stat_hit_pages = 0
+        self.stat_hit_tokens = 0          # token-granular cache-hit tokens
+        self.stat_hit_tokens_page = 0     # the page-aligned part of those
 
     @staticmethod
     def blocks_for(tokens: int, block_size: int) -> int:

@@ -8,11 +8,12 @@ scheduler's ``kv_usage`` signal the *actual* allocator state of the data
 plane, not a parallel estimate.
 
 ``SharedPagedAllocator`` adds prefix sharing on top: per-page refcounts, a
-hash-indexed full-page prefix cache (keyed on token-id chains), and
-copy-on-write so common prompt prefixes occupy physical pages once. Under
-sharing, ``free_blocks`` counts free *plus reclaimable cached* pages —
-still the truthful capacity signal, because cached pages are evictable on
-demand.
+**radix tree over token ids** (token-granular matching — partial-page
+prefixes share too, and decode-generated pages can be registered for
+n-gram continuation reuse), and copy-on-write so common prefixes occupy
+physical pages once. Under sharing, ``free_blocks`` counts free *plus
+reclaimable cached* pages — still the truthful capacity signal, because
+cached pages are evictable on demand.
 
 Page id 0 is reserved as the garbage page: it is never handed out, and the
 model's masked writes (chunk padding, inactive decode lanes) land there
@@ -98,23 +99,65 @@ class PagedBlockAllocator(BlockPool):
             assert self._held.get(rid, 0) == len(t)
 
 
+class _RadixNode:
+    """One radix-tree edge: a token span within a single page slot.
+
+    ``tokens`` are the edge label starting at absolute ``depth``;
+    ``page`` holds valid KV for every depth in ``[slot_start, end)`` where
+    ``slot_start = (depth // page_size) * page_size`` — the offsets before
+    ``depth`` were either written by the registering request or inherited
+    through a whole-page COW copy, so a matcher can always attach the
+    *deepest* node's page per slot. Spans never cross a page boundary.
+    """
+
+    __slots__ = ("tokens", "page", "depth", "parent", "children")
+
+    def __init__(self, tokens: List[int], page: int, depth: int,
+                 parent: Optional["_RadixNode"]):
+        self.tokens = list(tokens)
+        self.page = page
+        self.depth = depth
+        self.parent = parent
+        self.children: List["_RadixNode"] = []
+
+    @property
+    def end(self) -> int:
+        return self.depth + len(self.tokens)
+
+
+def _common_prefix(a: Sequence, b: Sequence) -> int:
+    n = min(len(a), len(b))
+    i = 0
+    while i < n and a[i] == b[i]:
+        i += 1
+    return i
+
+
 class SharedPagedAllocator(PagedBlockAllocator):
     """Prefix-sharing paged allocator: ref-counted pages + COW block tables.
 
-    The vLLM/SGLang prefix-caching design, kept truthful for Algorithm 1:
+    The vLLM/SGLang prefix-caching design with a **radix tree over token
+    ids** as the index, kept truthful for Algorithm 1:
 
-    * every *full* page a request prefills is registered in a hash index
-      under the chain key of the token prefix it completes (nested-tuple
-      chains — structural equality, so no hash-collision aliasing);
-    * :meth:`match_prefix` (called at admission) attaches the longest chain
-      of cached pages to the new request (refcount += 1 per page), so
-      prefill starts at the first unshared token;
+    * :meth:`register_prefix` indexes a request's pages under the token
+      sequence they store — *token-granular*: partial pages (a prompt tail,
+      decode-generated tokens at finish) are indexed too, so later arrivals
+      match mid-page and n-gram continuations of finished requests hit.
+      First writer wins: spans already covered keep their existing node;
+    * :meth:`match_prefix` (called at admission) walks the tree for the
+      longest token prefix of the new request, attaching the deepest
+      matched node's page per page slot (refcount += 1), so prefill starts
+      at the first unshared *token* — not the first unshared page;
     * indexed pages are immutable. :meth:`prepare_write` must be called
       before any KV write: pages that are shared (refcount > 1) or indexed
       are replaced by private copies (copy-on-write) and the (src, dst)
       pairs are returned for the engine to apply to the physical arrays;
-    * a page whose refcount drops to 0 stays cached (LRU-reclaimable) when
+    * a page whose refcount drops to 0 stays cached (LRU-reclaimable) while
       indexed, so requests arriving after the owner finished still hit.
+      Eviction is leaf-first so interior nodes never strand reachable
+      cached descendants; when only interior pages are cached, the LRU
+      page's whole subtree is evicted with it (cached descendants are
+      reclaimed too, live ones merely lose their index entry).
 
     Shared-aware accounting: ``free_blocks`` (hence ``kv_usage``) counts
     each physical page once — free and cached pages are both capacity,
@@ -124,49 +167,67 @@ class SharedPagedAllocator(PagedBlockAllocator):
     def __init__(self, n_pages: int, page_size: int = 16):
         super().__init__(n_pages, page_size)
         self.refcount: Dict[int, int] = {}        # live pages only (>= 1)
-        self._index: Dict[tuple, int] = {}        # prefix chain -> page id
-        self._page_key: Dict[int, tuple] = {}     # reverse map (indexed pages)
+        self._root = _RadixNode([], GARBAGE_PAGE, 0, None)
+        self._page_node: Dict[int, _RadixNode] = {}   # indexed pages only
         # refcount-0 indexed pages, insertion order == LRU eviction order
         self._cached: "OrderedDict[int, None]" = OrderedDict()
-        self._registered: Dict[int, int] = {}     # req -> leading pages indexed
-        self._keys_cache: Dict[int, List[tuple]] = {}  # req -> chain memo
-        self.stat_hit_pages = 0
-        self.stat_cow_copies = 0
+        self._matched: Dict[int, Tuple[int, int]] = {}  # rid -> (pages, toks)
         self.stat_evictions = 0
 
-    # ---- chain keys ------------------------------------------------------
-    def _chain_keys_for(self, req_id: int, tokens: Sequence) -> List[tuple]:
-        """One key per full page of ``tokens``; key i commits to the whole
-        prefix through page i via nested tuples (structural equality — no
-        collision risk). Memoized incrementally per request: a request's
-        prompt is immutable for its lifetime, and register runs once per
-        chunk, so without the memo every call would rebuild (and rehash)
-        the whole chain. Cleared on :meth:`free`."""
-        ps = self.block_size
-        keys = self._keys_cache.setdefault(req_id, [])
-        want = len(tokens) // ps
-        prev: Optional[tuple] = keys[-1] if keys else None
-        for i in range(len(keys), want):
-            prev = (prev, tuple(tokens[i * ps:(i + 1) * ps]))
-            keys.append(prev)
-        return keys[:want]
+    # ---- tree walking ----------------------------------------------------
+    def _best_child(self, node: _RadixNode, tokens: Sequence,
+                    d: int) -> Tuple[Optional[_RadixNode], int]:
+        """Child of ``node`` with the longest common prefix against
+        ``tokens[d:]``. Siblings may share leading tokens (divergent
+        continuations register side by side instead of splitting, since a
+        node owns exactly one physical page), so this scans; first
+        strictly-longer match wins, which keeps the walk deterministic."""
+        best, best_cp = None, 0
+        for c in node.children:
+            cp = _common_prefix(c.tokens, tokens[d:d + len(c.tokens)])
+            if cp > best_cp:
+                best, best_cp = c, cp
+        return best, best_cp
 
     # ---- physical page sourcing -----------------------------------------
+    def _evict(self, node: _RadixNode) -> None:
+        """Drop ``node``'s subtree from the index. Cached descendant pages
+        (beyond the node's own, which the caller is taking) go back to the
+        free list; live descendant pages stay owned by their requests and
+        simply stop being matchable — nothing cached is ever stranded
+        unreachable behind an evicted interior node."""
+        node.parent.children.remove(node)
+        stack = [node]
+        while stack:
+            n = stack.pop()
+            stack.extend(n.children)
+            del self._page_node[n.page]
+            self.stat_evictions += 1
+            if n.page in self._cached:
+                del self._cached[n.page]
+                if n is not node:
+                    self._free_ids.append(n.page)
+
     def _take_page(self) -> int:
-        """Pop a physical page: the free list first, else evict the LRU
-        cached page (dropping its index entry). Caller updates books."""
+        """Pop a physical page: the free list first, else evict a cached
+        page — LRU among tree leaves so ancestors stay matchable; if every
+        cached page is interior, the LRU one goes with its whole subtree.
+        Caller updates the books."""
         if self._free_ids:
             return self._free_ids.pop()
-        p, _ = self._cached.popitem(last=False)
-        del self._index[self._page_key.pop(p)]
-        self.stat_evictions += 1
+        for p in self._cached:                    # insertion order == LRU
+            if not self._page_node[p].children:
+                self._evict(self._page_node[p])
+                return p
+        p = next(iter(self._cached))
+        self._evict(self._page_node[p])
         return p
 
     def _unref(self, p: int) -> None:
         self.refcount[p] -= 1
         if self.refcount[p] == 0:
             del self.refcount[p]
-            if p in self._page_key:       # keep content reusable (LRU cache)
+            if p in self._page_node:      # keep content reusable (LRU cache)
                 self._cached[p] = None
             else:
                 self._free_ids.append(p)
@@ -199,49 +260,94 @@ class SharedPagedAllocator(PagedBlockAllocator):
         for p in self.tables.pop(req_id, []):
             self._unref(p)
         self._held.pop(req_id, None)
-        self._registered.pop(req_id, None)
-        self._keys_cache.pop(req_id, None)
+        self._matched.pop(req_id, None)
+
+    def release_match(self, req_id: int) -> None:
+        """Roll back a speculative admission match whose allocate failed:
+        detach the pages AND uncount the hit telemetry. A request stuck at
+        the head of the queue under KV pressure re-matches every step; a
+        match that never skipped any prefill must not inflate
+        ``stat_hit_tokens`` (the cluster's cache-hit signals)."""
+        pages, toks = self._matched.get(req_id, (0, 0))
+        self.stat_hit_pages -= pages
+        self.stat_hit_tokens -= toks
+        self.stat_hit_tokens_page -= (toks // self.block_size) \
+            * self.block_size
+        self.free(req_id)
 
     # ---- prefix sharing --------------------------------------------------
     def match_prefix(self, req_id: int, tokens: Sequence) -> int:
-        """Attach the longest chain of cached full pages covering a prefix
-        of ``tokens`` to ``req_id``'s (empty) block table. Returns the
-        matched token count (a multiple of page_size). The caller decides
-        how much prefill to skip — at least the last prompt token must be
-        recomputed so its logits can seed sampling."""
-        assert not self.tables.get(req_id), "match_prefix needs empty table"
-        table: List[int] = []
-        for key in self._chain_keys_for(req_id, tokens):
-            p = self._index.get(key)
-            if p is None:
+        """Attach the longest cached *token* prefix of ``tokens`` to
+        ``req_id``'s block table: walk the radix tree, keep the deepest
+        matched node's page per page slot, refcount each attached page.
+        Returns the matched token count — any value, not just page
+        multiples. The caller decides how much prefill to skip — at least
+        the last prompt token must be recomputed so its logits can seed
+        sampling. A request with a non-empty table (resume mid-life) is a
+        defined no-op returning 0: its pages already cover its state."""
+        if self.tables.get(req_id):
+            return 0
+        node, d = self._root, 0
+        slot_page: Dict[int, int] = {}
+        while d < len(tokens):
+            child, cp = self._best_child(node, tokens, d)
+            if child is None or cp == 0:
                 break
-            if p in self._cached:          # revive a reclaimable page
+            slot_page[child.depth // self.block_size] = child.page
+            if child.page in self._cached:        # touch LRU recency
+                self._cached.move_to_end(child.page)
+            d = child.depth + cp
+            if cp < len(child.tokens):
+                break                             # partial-page match: stop
+            node = child
+        if d == 0:
+            return 0
+        table = [slot_page[k] for k in range((d - 1) // self.block_size + 1)]
+        for p in table:
+            if p in self._cached:                 # revive a reclaimable page
                 del self._cached[p]
                 self.refcount[p] = 1
                 self.free_blocks -= 1
             else:
                 self.refcount[p] += 1
-            table.append(p)
-        if table:
-            self.tables[req_id] = table
-            self._held[req_id] = len(table)
-            self._registered[req_id] = len(table)
-            self.stat_hit_pages += len(table)
-        return len(table) * self.block_size
+        self.tables[req_id] = table
+        self._held[req_id] = len(table)
+        self._matched[req_id] = (len(table), d)   # release_match rollback
+        self.stat_hit_pages += len(table)
+        self.stat_hit_tokens += d
+        self.stat_hit_tokens_page += (d // self.block_size) * self.block_size
+        return d
 
     def register_prefix(self, req_id: int, tokens: Sequence) -> None:
-        """Index ``req_id``'s full pages covering ``tokens`` (its prefilled
-        prompt prefix) so later arrivals can share them. First writer wins:
-        chains already indexed keep their existing page."""
+        """Index ``req_id``'s pages storing ``tokens`` (prompt prefix, or
+        prompt + generated tokens at finish) so later arrivals share them —
+        token-granular: the trailing partial page is indexed too. First
+        writer wins: spans already covered by the tree keep their existing
+        node (re-registering a grown prefix just extends the frontier).
+        Only pages not yet indexed gain nodes; indexed pages are immutable
+        (COW guarantees a request's own written pages are private)."""
         table = self.tables.get(req_id, [])
-        keys = self._chain_keys_for(req_id, tokens)
-        upto = min(len(keys), len(table))
-        for i in range(self._registered.get(req_id, 0), upto):
-            key, p = keys[i], table[i]
-            if key not in self._index and p not in self._page_key:
-                self._index[key] = p
-                self._page_key[p] = key
-        self._registered[req_id] = max(self._registered.get(req_id, 0), upto)
+        ps = self.block_size
+        limit = min(len(tokens), len(table) * ps)
+        node, d = self._root, 0
+        while d < limit:
+            child, cp = self._best_child(node, tokens, d)
+            if child is not None and cp == len(child.tokens):
+                node = child                      # covered: descend
+                d += cp
+                continue
+            end = min((d // ps + 1) * ps, limit)
+            span = list(tokens[d:end])
+            if child is not None and cp == len(span):
+                break        # an existing node already covers this tail
+            page = table[d // ps]
+            if page in self._page_node:
+                break        # already indexed under another span
+            new = _RadixNode(span, page, d, node)
+            node.children.append(new)
+            self._page_node[page] = new
+            node = new
+            d = end
 
     def prepare_write(self, req_id: int, start_tok: int,
                       end_tok: int) -> Optional[List[Tuple[int, int]]]:
@@ -258,7 +364,7 @@ class SharedPagedAllocator(PagedBlockAllocator):
         hi = min(-(-end_tok // self.block_size), len(table))
         idxs = [i for i in range(lo, hi)
                 if self.refcount[table[i]] > 1
-                or table[i] in self._page_key]
+                or table[i] in self._page_node]
         if not idxs:
             return []
         if len(idxs) > self.free_blocks:
@@ -286,11 +392,52 @@ class SharedPagedAllocator(PagedBlockAllocator):
         """Distinct physical pages currently backing live block tables."""
         return self.n_pages - len(self._free_ids) - len(self._cached)
 
+    def _summary_dfs(self, node: _RadixNode, acc: Optional[tuple],
+                     entries: Dict[int, int]) -> Tuple[int, int]:
+        """Accumulate :meth:`prefix_summary` entries: ``acc`` carries the
+        first-page tokens gathered so far (None once this path is keyed);
+        a path is keyed at the node where it reaches one full page — or at
+        its leaf, for shallower trees — and maps to the deepest token
+        depth reachable below. Returns (deepest depth, indexed tokens)."""
+        deepest, total = node.end, len(node.tokens)
+        key_here = None
+        if acc is not None:
+            acc = (acc + tuple(node.tokens))[:self.block_size]
+            if len(acc) >= self.block_size or not node.children:
+                key_here, acc = acc, None
+        for c in node.children:
+            d, t = self._summary_dfs(c, acc, entries)
+            deepest = max(deepest, d)
+            total += t
+        if key_here is not None:
+            k = hash(key_here)
+            entries[k] = max(entries.get(k, 0), deepest)
+        return deepest, total
+
+    def prefix_summary(self):
+        """Compact digest of the radix tree for the DP scheduler's
+        prefix-affinity signal: fingerprints of each distinct root-level
+        first page (or shorter leaf path) mapped to the deepest matchable
+        token depth beneath it, plus the total indexed token count. A few
+        ints per distinct system prompt — cheap enough to ride every
+        :class:`~repro.core.traces.EngineTrace`."""
+        from repro.core.traces import PrefixSummary
+        entries: Dict[int, int] = {}
+        total = 0
+        for c in self._root.children:
+            _, t = self._summary_dfs(c, (), entries)
+            total += t
+        return PrefixSummary(block_size=self.block_size, entries=entries,
+                             indexed_tokens=total)
+
     def check_invariants(self) -> None:
         """Sharing-aware books must balance (test hook): every physical
         page is in exactly one of {free list, reclaimable cache, live
         refcounted set}; refcounts equal table multiplicity; kv_usage
-        counts physical pages once."""
+        counts physical pages once; the radix tree is a page <-> node
+        bijection of contiguous, slot-local spans with every indexed page
+        (in particular every cached page — eviction must never strand one)
+        reachable from the root."""
         assert self.free_blocks == len(self._free_ids) + len(self._cached), \
             (self.free_blocks, len(self._free_ids), len(self._cached))
         counts: Dict[int, int] = {}
@@ -307,9 +454,23 @@ class SharedPagedAllocator(PagedBlockAllocator):
         assert len(fs) + len(cs) + len(hs) == self.n_pages
         for rid, t in self.tables.items():
             assert self._held.get(rid, 0) == len(t)
-        # index <-> page bijection; cached pages are always indexed
-        assert sorted(self._page_key) == sorted(self._index.values())
-        for key, p in self._index.items():
-            assert self._page_key[p] == key
-        assert cs <= set(self._page_key)
+        assert set(self._matched) <= set(self.tables), "stale match memo"
+        # radix tree structure: reachable nodes <-> indexed pages
+        seen: Dict[int, _RadixNode] = {}
+        stack = [self._root]
+        while stack:
+            n = stack.pop()
+            for c in n.children:
+                assert c.parent is n, "broken parent link"
+                assert c.depth == n.end, "non-contiguous child depth"
+                assert len(c.tokens) >= 1, "empty edge"
+                assert c.depth % self.block_size + len(c.tokens) \
+                    <= self.block_size, "edge crosses a page boundary"
+                assert c.page not in seen, "page owned by two nodes"
+                seen[c.page] = c
+                stack.append(c)
+        assert seen == self._page_node, \
+            "unreachable index entry (stranded page)"
+        assert cs <= set(seen), "cached page not indexed"
+        assert not (set(seen) & fs), "indexed page on the free list"
         assert 0.0 <= self.usage <= 1.0

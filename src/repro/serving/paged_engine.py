@@ -246,6 +246,16 @@ class PagedRealEngine:
         r.state = RequestState.FINISHED
         r.finish_time = now
         self.running.remove(r)
+        if self.sharing and r.prompt_tokens:
+            # register everything the pages actually hold — prompt AND
+            # generated tokens, token-granular including the partial tail
+            # (the newest sampled token's KV is never written, hence the
+            # _kv_len cap) — so future prompts continuing this request's
+            # n-gram stream hit past the original prompt. Done only at
+            # finish: these pages take no further writes, so indexing
+            # them cannot trigger COW churn.
+            seq = list(r.prompt_tokens) + list(r.output_tokens or [])
+            self.pool.register_prefix(r.req_id, seq[:self._kv_len(r)])
         self.pool.free(r.req_id)
         self.finished.append(r)
 
@@ -322,9 +332,13 @@ class PagedRealEngine:
         r.prefill_done += chunk
         self.total_prefill_tokens += chunk
         if self.sharing:
-            # full pages just completed become shareable (first writer wins)
-            self.pool.register_prefix(r.req_id,
-                                      r.prompt_tokens[:r.prefill_done])
+            # full pages just completed become shareable (first writer
+            # wins). Mid-life registration is floored to the page boundary:
+            # indexing the in-progress partial page would force a COW on
+            # the very next chunk/decode write into it — the token-granular
+            # tail is registered once at finish instead.
+            full = r.prefill_done - r.prefill_done % self.ecfg.page_size
+            self.pool.register_prefix(r.req_id, r.prompt_tokens[:full])
         if stats is not None:
             self.stats_log.append(jax.tree.map(np.asarray, stats))
         if r.remaining_prefill == 0:
@@ -380,6 +394,9 @@ class PagedRealEngine:
             n_running=len(self.running),
             n_waiting=len(self.waiting),
             n_stalled=self._stalled_last,
+            # radix-cache digest: the scheduler's prefix-affinity signal
+            prefix_summary=self.pool.prefix_summary()
+            if self.sharing else None,
             timestamp=now,
         )
 

@@ -92,10 +92,13 @@ def serve_real_cluster(requests: List[Request], engines, *,
         cur_perms = new_perms
     while (pending or any(e.has_work for e in engines)) \
             and rounds < cc.max_rounds:
-        # dispatch arrivals due by now (Algorithm 1 against live traces)
+        # dispatch arrivals due by now (Algorithm 1 against live traces;
+        # prompt ids let the scheduler score prefix affinity against the
+        # engines' radix-cache summaries)
         while pending and pending[0].arrival_time <= now:
             r = pending.pop(0)
-            eid = sched.select_engine(r.prompt_len, now)
+            eid = sched.select_engine(r.prompt_len, now,
+                                      prompt_tokens=r.prompt_tokens)
             engines[eid].enqueue(r, now)
         for e in engines:
             e.step(now)
@@ -138,15 +141,24 @@ def serve_real_cluster(requests: List[Request], engines, *,
         "stalled": sum(getattr(e, "n_stalled_total", 0) for e in engines),
         "rejected": sum(1 for r in requests if r.error),
         "kv_peak": kv_peak,
-        # prefix-sharing telemetry (0 when sharing is off / plain pools)
-        "prefix_hit_tokens": sum(getattr(e, "prefix_hit_tokens", 0)
-                                 for e in engines),
-        "pages_allocated": sum(
-            getattr(getattr(e, "pool", None), "stat_blocks_allocated", 0)
-            for e in engines),
-        "cow_copies": sum(
-            getattr(getattr(e, "pool", None), "stat_cow_copies", 0)
-            for e in engines),
+        # prefix-sharing telemetry (0 when sharing is off). Deliberately
+        # direct attribute access: every engine type declares
+        # ``prefix_hit_tokens`` (and every pool the stat_* counters), so a
+        # refactor that drops the field fails loudly here instead of a
+        # getattr default silently zeroing that engine out of the sum.
+        "prefix_hit_tokens": sum(e.prefix_hit_tokens for e in engines),
+        "per_engine_prefix_hits": {e.engine_id: e.prefix_hit_tokens
+                                   for e in engines},
+        "pages_allocated": sum(e.pool.stat_blocks_allocated
+                               for e in engines if hasattr(e, "pool")),
+        "cow_copies": sum(e.pool.stat_cow_copies
+                          for e in engines if hasattr(e, "pool")),
+        # token-granular vs page-aligned cache hits (radix-tree gain)
+        "hit_tokens": sum(e.pool.stat_hit_tokens
+                          for e in engines if hasattr(e, "pool")),
+        "hit_tokens_page_aligned": sum(e.pool.stat_hit_tokens_page
+                                       for e in engines
+                                       if hasattr(e, "pool")),
         "decisions": getattr(sched, "decisions", {}),
         "per_engine": {e.engine_id: sum(1 for r in requests
                                         if r.engine_id == e.engine_id

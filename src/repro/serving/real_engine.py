@@ -50,6 +50,10 @@ class RealModelEngine:
         self.lengths = np.zeros(max_slots, np.int32)
         self.active = np.zeros(max_slots, bool)
         self.req_of_slot: Dict[int, Request] = {}
+        # no prefix cache on the slot-indexed legacy plane — declared
+        # explicitly (always 0) so cluster telemetry sums stay honest
+        # instead of getattr-defaulting this engine type out of the books
+        self.prefix_hit_tokens = 0
         self.waiting: List[Request] = []
         self.placement = np.asarray(identity_placement(cfg))
         self.qcfg = QueueConfig(theta_age_s=5.0)

@@ -284,7 +284,8 @@ def simulate(requests: List[Request], system: SystemConfig, *,
                 eid = int(np.argmin(oracle_load))
                 oracle_load[eid] += work
             else:
-                eid = sched.select_engine(r.prompt_len, now)
+                eid = sched.select_engine(r.prompt_len, now,
+                                          prompt_tokens=r.prompt_tokens)
             engines[eid].enqueue(r, now)
             kick(eid, now)
         elif kind == "trace":

@@ -1,8 +1,9 @@
 """Shared fixtures for the serving/paged test files.
 
-``tiny_model`` is session-scoped so test_paged.py and
-test_prefix_sharing.py share one set of params (and engines built on one
-runner share jit compiles) instead of recompiling per file.
+``tiny_model`` and ``shared_runner`` are session-scoped so test_paged.py,
+test_prefix_sharing.py and test_prefix_affinity.py share one set of params
+and one jitted ``PagedModelRunner`` (engines built on one runner share jit
+compiles) instead of recompiling per file.
 """
 import jax
 import pytest
@@ -17,3 +18,13 @@ def tiny_model():
     cfg = reduced(cfg, n_layers=2)        # halve compile time for tests
     params = build_model(cfg).init(jax.random.PRNGKey(0))
     return cfg, params
+
+
+@pytest.fixture(scope="session")
+def shared_runner(tiny_model):
+    from repro.serving import PagedEngineConfig, PagedModelRunner
+    cfg, params = tiny_model
+    ecfg = PagedEngineConfig(page_size=8, n_pages=64, max_blocks_per_req=8,
+                             max_batch=4, token_budget=16,
+                             chunk_buckets=(8, 16), attn_backend="xla")
+    return PagedModelRunner(cfg, params, ecfg, n_sources=2)

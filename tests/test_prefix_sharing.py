@@ -25,21 +25,35 @@ import numpy as np
 import pytest
 
 from repro.models import transformer as tfm
-from repro.serving import (PagedBlockAllocator, PagedEngineConfig,
-                           PagedModelRunner, PagedRealEngine,
+from repro.serving import (PagedBlockAllocator, PagedRealEngine,
                            RealClusterConfig, Request, RequestState,
                            SharedPagedAllocator, serve_real_cluster)
 
 
 # ================================================================ oracle
-class PrefixOracle:
-    """Independent model of the prefix-sharing allocator semantics.
+class _ONode:
+    """Oracle radix node: a token span within one page slot."""
 
-    Pages are opaque objects — no free-list ids, no BlockPool books. The
-    differential property test compares aggregate observables (free
-    capacity, match lengths, COW counts, table sizes, cache size) after
-    every operation, while ``check_invariants`` covers the impl's internal
-    books.
+    def __init__(self, tokens, page, depth, parent):
+        self.tokens = list(tokens)
+        self.page = page
+        self.depth = depth
+        self.parent = parent
+        self.children = []
+
+    @property
+    def end(self):
+        return self.depth + len(self.tokens)
+
+
+class RadixOracle:
+    """Independent model of the radix prefix-sharing allocator semantics.
+
+    Pages are opaque objects — no free-list ids, no BlockPool books, no
+    index dictionaries. The differential property test compares aggregate
+    observables (free capacity, token-granular match lengths, COW counts,
+    table sizes, cache size) after every operation, while
+    ``check_invariants`` covers the impl's internal books.
     """
 
     def __init__(self, n_pages, page_size):
@@ -47,32 +61,56 @@ class PrefixOracle:
         self.free = n_pages            # free + reclaimable cached
         self._nfree = n_pages          # never-cached free pages
         self.refs = {}                 # page-obj -> refcount (>= 1)
-        self.index = {}                # chain -> page-obj
-        self.key_of = {}               # page-obj -> chain
+        self.node_of = {}              # page-obj -> node (indexed pages)
         self.cached = OrderedDict()    # refcount-0 indexed pages (LRU)
         self.tables = {}
-        self.reg = {}
+        self.root = _ONode([], None, 0, None)
 
-    def _chains(self, tokens):
-        out, prev = [], None
-        for i in range(len(tokens) // self.ps):
-            prev = (prev, tuple(tokens[i * self.ps:(i + 1) * self.ps]))
-            out.append(prev)
-        return out
+    @staticmethod
+    def _cp(a, b):
+        n = min(len(a), len(b))
+        i = 0
+        while i < n and a[i] == b[i]:
+            i += 1
+        return i
+
+    def _best(self, node, tokens, d):
+        best, best_cp = None, 0
+        for c in node.children:
+            cp = self._cp(c.tokens, tokens[d:d + len(c.tokens)])
+            if cp > best_cp:
+                best, best_cp = c, cp
+        return best, best_cp
+
+    def _evict(self, node):
+        node.parent.children.remove(node)
+        stack = [node]
+        while stack:
+            n = stack.pop()
+            stack.extend(n.children)
+            del self.node_of[n.page]
+            if n.page in self.cached:
+                del self.cached[n.page]
+                if n is not node:
+                    self._nfree += 1
 
     def _take(self):
         if self._nfree > 0:
             self._nfree -= 1
             return object()
-        p, _ = self.cached.popitem(last=False)
-        del self.index[self.key_of.pop(p)]
+        for p in self.cached:          # LRU leaf first
+            if not self.node_of[p].children:
+                self._evict(self.node_of[p])
+                return p
+        p = next(iter(self.cached))    # all interior: subtree goes with it
+        self._evict(self.node_of[p])
         return p
 
     def _unref(self, p):
         self.refs[p] -= 1
         if self.refs[p] == 0:
             del self.refs[p]
-            if p in self.key_of:
+            if p in self.node_of:
                 self.cached[p] = None
             else:
                 self._nfree += 1
@@ -93,33 +131,56 @@ class PrefixOracle:
         return True
 
     def match(self, rid, tokens):
-        assert not self.tables.get(rid)
-        table = []
-        for key in self._chains(tokens):
-            p = self.index.get(key)
-            if p is None:
+        if self.tables.get(rid):
+            return 0
+        node, d = self.root, 0
+        slot = {}
+        while d < len(tokens):
+            c, cp = self._best(node, tokens, d)
+            if c is None or cp == 0:
                 break
+            slot[c.depth // self.ps] = c.page
+            if c.page in self.cached:
+                self.cached.move_to_end(c.page)
+            d = c.depth + cp
+            if cp < len(c.tokens):
+                break
+            node = c
+        if d == 0:
+            return 0
+        table = [slot[k] for k in range((d - 1) // self.ps + 1)]
+        for p in table:
             if p in self.cached:
                 del self.cached[p]
                 self.refs[p] = 1
                 self.free -= 1
             else:
                 self.refs[p] += 1
-            table.append(p)
-        if table:
-            self.tables[rid] = table
-            self.reg[rid] = len(table)
-        return len(table) * self.ps
+        self.tables[rid] = table
+        return d
 
     def register(self, rid, tokens):
-        t = self.tables.get(rid, [])
-        keys = self._chains(tokens)
-        upto = min(len(keys), len(t))
-        for i in range(self.reg.get(rid, 0), upto):
-            if keys[i] not in self.index and t[i] not in self.key_of:
-                self.index[keys[i]] = t[i]
-                self.key_of[t[i]] = keys[i]
-        self.reg[rid] = max(self.reg.get(rid, 0), upto)
+        table = self.tables.get(rid, [])
+        limit = min(len(tokens), len(table) * self.ps)
+        node, d = self.root, 0
+        while d < limit:
+            c, cp = self._best(node, tokens, d)
+            if c is not None and cp == len(c.tokens):
+                node = c
+                d += cp
+                continue
+            end = min((d // self.ps + 1) * self.ps, limit)
+            span = list(tokens[d:end])
+            if c is not None and cp == len(span):
+                break
+            page = table[d // self.ps]
+            if page in self.node_of:
+                break
+            new = _ONode(span, page, d, node)
+            node.children.append(new)
+            self.node_of[page] = new
+            node = new
+            d = end
 
     def prepare_write(self, rid, lo_tok, hi_tok):
         """Returns the COW copy count, or None on OOM (mirrors impl)."""
@@ -129,7 +190,7 @@ class PrefixOracle:
         lo = lo_tok // self.ps
         hi = min(-(-hi_tok // self.ps), len(t))
         idxs = [i for i in range(lo, hi)
-                if self.refs[t[i]] > 1 or t[i] in self.key_of]
+                if self.refs[t[i]] > 1 or t[i] in self.node_of]
         if not idxs:
             return 0
         if len(idxs) > self.free:
@@ -145,17 +206,21 @@ class PrefixOracle:
     def free_req(self, rid):
         for p in self.tables.pop(rid, []):
             self._unref(p)
-        self.reg.pop(rid, None)
 
 
 # ================================================================ properties
 N_PAGES, PS = 12, 4
 
-# prompts engineered for heavy prefix collision: full duplicates, shared
-# page prefixes of different depths, and one unshared prompt
+# prompts engineered for heavy prefix collision at TOKEN granularity:
+# full duplicates, shared prefixes ending mid-page (13, 9), page-aligned
+# prefixes, and one unshared prompt
 _BASE = list(range(40))
-_PROMPTS = [_BASE[:24], _BASE[:24], _BASE[:12] + [77] * 12,
-            _BASE[:8] + [88] * 8, [5] * 20, _BASE[:16]]
+_PROMPTS = [_BASE[:24], _BASE[:24], _BASE[:13] + [77] * 11,
+            _BASE[:9] + [88] * 7, [5] * 20, _BASE[:18]]
+# deterministic per-rid decode streams: finish-time registration indexes
+# them, and re-admissions of the same rid query prompt+stream prefixes —
+# the n-gram continuation-reuse path
+_GENS = [[900 + 50 * i + j for j in range(16)] for i in range(6)]
 
 
 def _impl_counts(a):
@@ -169,40 +234,45 @@ def _oracle_counts(o):
 
 
 @settings(max_examples=25, deadline=None)
-@given(st.lists(st.tuples(st.integers(0, 4), st.integers(0, 5),
+@given(st.lists(st.tuples(st.integers(0, 5), st.integers(0, 5),
                           st.integers(1, 12)),
                 min_size=1, max_size=60))
 def test_shared_allocator_matches_oracle(ops):
-    """Random interleavings of admit/chunk/decode/free/failing-allocate:
-    the allocator's books track the oracle and the invariant pack holds
+    """Random interleavings of admit / chunk / decode / finish+register /
+    preempt / failing-allocate: token-granular match lengths and the books
+    track the independent radix oracle, and the invariant pack (including
+    tree reachability — eviction never strands a cached descendant) holds
     after every single operation."""
     a = SharedPagedAllocator(N_PAGES, page_size=PS)
-    o = PrefixOracle(N_PAGES, PS)
-    state = {}   # rid -> {"done": int, "gen": int} while active
+    o = RadixOracle(N_PAGES, PS)
+    state = {}   # rid -> {"q": query tokens, "done": int, "gen": int}
 
     def check():
         a.check_invariants()
         assert _impl_counts(a) == _oracle_counts(o)
 
     for op, rid, amt in ops:
-        prompt = _PROMPTS[rid % len(_PROMPTS)]
-        plen = len(prompt)
+        base = _PROMPTS[rid % len(_PROMPTS)]
         if op == 0 and rid not in state:          # admit: match + 1st chunk
-            m = a.match_prefix(rid, prompt)
-            assert m == o.match(rid, prompt)
-            assert m % PS == 0 and m <= plen
-            done = min(m, plen - 1)
-            first = min(plen - done, 2 * PS)
+            # some admissions extend the prompt with the rid's decode
+            # stream — hits past the original prompt once it finished
+            q = base + _GENS[rid % len(_GENS)][:amt % 4]
+            m = a.match_prefix(rid, q)
+            assert m == o.match(rid, q)
+            assert 0 <= m <= len(q)               # token-granular: any value
+            done = min(m, len(q) - 1)
+            first = min(len(q) - done, 2 * PS)
             ok = a.allocate(rid, done + first)
             assert ok == o.allocate(rid, done + first)
             if ok:
-                state[rid] = {"done": done, "gen": 0}
+                state[rid] = {"q": q, "done": done, "gen": 0}
             else:
                 a.free(rid)
                 o.free_req(rid)
-        elif op == 1 and rid in state and state[rid]["done"] < plen:
-            done = state[rid]["done"]             # prefill one chunk
-            chunk = min(amt, plen - done)
+        elif op == 1 and rid in state \
+                and state[rid]["done"] < len(state[rid]["q"]):
+            q, done = state[rid]["q"], state[rid]["done"]
+            chunk = min(amt, len(q) - done)       # prefill one chunk
             ok = a.allocate(rid, done + chunk)
             assert ok == o.allocate(rid, done + chunk)
             if ok:
@@ -213,11 +283,15 @@ def test_shared_allocator_matches_oracle(ops):
                     assert len(cw) == cwo
                     assert all(s != d for s, d in cw)
                     state[rid]["done"] = done + chunk
-                    a.register_prefix(rid, prompt[:done + chunk])
-                    o.register(rid, prompt[:done + chunk])
-        elif op == 2 and rid in state and state[rid]["done"] >= plen - 1 \
+                    # unfloored: deliberately index the partial tail page
+                    # (harsher than the engines, which floor mid-life) to
+                    # stress token-granular registration + COW-on-reentry
+                    a.register_prefix(rid, q[:done + chunk])
+                    o.register(rid, q[:done + chunk])
+        elif op == 2 and rid in state \
+                and state[rid]["done"] >= len(state[rid]["q"]) - 1 \
                 and state[rid]["gen"] < 10:       # decode one token
-            pos = plen + state[rid]["gen"]
+            pos = len(state[rid]["q"]) + state[rid]["gen"]
             ok = a.allocate(rid, pos + 1)
             assert ok == o.allocate(rid, pos + 1)
             if ok:
@@ -227,21 +301,29 @@ def test_shared_allocator_matches_oracle(ops):
                 if cw is not None:
                     assert len(cw) == cwo
                     state[rid]["gen"] += 1
-        elif op == 3 and rid in state:            # finish / preempt
+        elif op == 3 and rid in state:            # finish: register + free
+            s = state.pop(rid)
+            j0 = len(s["q"]) - len(base)          # stream continuation point
+            seq = s["q"] + _GENS[rid % len(_GENS)][j0:j0 + s["gen"]]
+            a.register_prefix(rid, seq)
+            o.register(rid, seq)
             a.free(rid)
             o.free_req(rid)
-            state.pop(rid)
         elif op == 4:                             # failing allocate: atomic
             snap = (a.free_blocks, list(a._free_ids),
                     {r: list(t) for r, t in a.tables.items()},
                     dict(a._held), dict(a.refcount),
-                    list(a._cached), dict(a._index))
+                    list(a._cached), set(a._page_node))
             assert not a.allocate(rid, (N_PAGES + 1 + len(
                 a.tables.get(rid, []))) * PS)
             assert snap == (a.free_blocks, list(a._free_ids),
                             {r: list(t) for r, t in a.tables.items()},
                             dict(a._held), dict(a.refcount),
-                            list(a._cached), dict(a._index))
+                            list(a._cached), set(a._page_node))
+        elif op == 5 and rid in state:            # preempt: free, no index
+            a.free(rid)
+            o.free_req(rid)
+            state.pop(rid)
         check()
 
     for rid in list(state):
@@ -250,6 +332,66 @@ def test_shared_allocator_matches_oracle(ops):
         check()
     assert a.free_blocks == N_PAGES               # all capacity reclaimable
     assert a.pages_in_use == 0
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 1), st.integers(0, 5),
+                          st.integers(1, 24)),
+                min_size=1, max_size=40))
+def test_match_equals_bruteforce_longest_prefix(ops):
+    """Tree-free cross-check: in the no-eviction regime the radix walk
+    must return EXACTLY the longest common token prefix between the query
+    and any registered sequence — computed here by brute force over a
+    plain list, sharing no code or structure with the tree. (RadixOracle
+    mirrors the algorithm to pin down the capacity books under eviction;
+    this oracle is the independent check on the matching logic itself.)"""
+    a = SharedPagedAllocator(512, page_size=4)    # roomy: never evicts
+    registered = []
+    rid = 0
+    for op, which, amt in ops:
+        rid += 1
+        seq = (_PROMPTS[which % len(_PROMPTS)]
+               + _GENS[which % len(_GENS)])[:amt]
+        if op == 0:                               # register a fresh copy
+            assert a.allocate(rid, len(seq))
+            a.register_prefix(rid, seq)
+            registered.append(list(seq))
+        else:                                     # query
+            m = a.match_prefix(rid, seq)
+            want = 0
+            for s in registered:
+                cp = 0
+                while cp < min(len(s), len(seq)) and s[cp] == seq[cp]:
+                    cp += 1
+                want = max(want, cp)
+            assert m == want, (seq, registered)
+            a.free(rid)
+        a.check_invariants()
+    assert a.stat_evictions == 0                  # premise of the oracle
+
+
+def test_failed_admission_rolls_back_hit_stats():
+    """A match whose follow-up allocate fails is released WITH its
+    telemetry: a request retrying admission every step under KV pressure
+    must not inflate stat_hit_tokens for prefill it never skipped."""
+    a = SharedPagedAllocator(2, page_size=4)
+    P = list(range(8))
+    assert a.allocate(1, 8)                       # whole pool
+    a.register_prefix(1, P)
+    m = a.match_prefix(2, P + [9] * 8)
+    assert m == 8                                 # shared pages attach fine
+    assert not a.allocate(2, 12)                  # but the tail has no room
+    a.release_match(2)
+    a.check_invariants()
+    assert a.stat_hit_tokens == 0
+    assert a.stat_hit_pages == 0
+    assert a.stat_hit_tokens_page == 0
+    # the cache itself is intact — a later retry still matches
+    assert a.match_prefix(2, P) == 8
+    assert a.stat_hit_tokens == 8
+    a.free(2)
+    a.free(1)
+    a.check_invariants()
 
 
 @settings(max_examples=15, deadline=None)
@@ -321,6 +463,117 @@ def test_cow_preserves_cached_content_page():
     a.check_invariants()
 
 
+def test_token_granular_matching():
+    """Radix matching is token-granular: partial-page prompt tails match,
+    mid-page divergence matches up to the first differing token, and a
+    request with a non-empty table re-matches as a defined no-op (the
+    resume-after-preemption path)."""
+    a = SharedPagedAllocator(16, page_size=4)
+    P = list(range(13))                        # 3 full pages + 1-token tail
+    assert a.allocate(1, 13)
+    a.register_prefix(1, P)
+    a.check_invariants()
+
+    assert a.match_prefix(2, P) == 13          # full incl. the partial tail
+    assert len(a.table_of(2)) == 4
+    a.check_invariants()
+    assert a.match_prefix(2, P) == 0           # non-empty table: no-op, not
+    assert len(a.table_of(2)) == 4             # an assertion failure
+    a.free(2)
+
+    assert a.match_prefix(3, P[:10] + [99, 99]) == 10   # mid-page diverge
+    assert len(a.table_of(3)) == 3
+    a.check_invariants()
+    a.free(3)
+
+    assert a.match_prefix(4, [7] * 8) == 0     # unshared prompt
+    a.free(1)
+    a.check_invariants()
+    # strict domination over full-page matching is visible in the books
+    assert a.stat_hit_tokens == 13 + 10
+    assert a.stat_hit_tokens_page == 12 + 8
+    assert a.stat_hit_tokens > a.stat_hit_tokens_page
+
+
+def test_ngram_continuation_reuse():
+    """Decode-generated pages registered at finish are matchable: a prompt
+    that continues a finished request's token stream hits past the original
+    prompt length."""
+    a = SharedPagedAllocator(16, page_size=4)
+    prompt, gen = list(range(10)), [500, 501, 502, 503, 504]
+    assert a.allocate(1, 15)
+    a.register_prefix(1, prompt + gen)         # finish-time registration
+    a.free(1)
+    a.check_invariants()
+
+    m = a.match_prefix(2, prompt + gen[:3] + [9999])
+    assert m == 13                             # past the 10-token prompt
+    a.check_invariants()
+    a.free(2)
+    a.check_invariants()
+
+
+def test_eviction_never_strands_cached_descendants():
+    """LRU eviction prefers leaves; when only interior pages are cached,
+    the subtree goes with them — afterwards every cached page must still
+    be reachable from the root (the invariant pack checks reachability),
+    and ancestors keep matching after a leaf eviction."""
+    a = SharedPagedAllocator(6, page_size=4)
+    P = list(range(16))                        # chain of 4 nodes
+    assert a.allocate(1, 16)
+    a.register_prefix(1, P)
+    a.free(1)                                  # 4 cached pages, 2 free
+    assert a.n_cached == 4
+
+    # taking 3 pages: 2 free + 1 evicted — must be the deepest LRU leaf
+    assert a.allocate(2, 12)
+    a.check_invariants()
+    assert a.stat_evictions == 1
+    assert a.match_prefix(3, P) == 12          # ancestors survived
+    a.check_invariants()
+    a.free(3)
+
+    # interior-page pressure: allocate everything reclaimable
+    a.free(2)
+    a.check_invariants()
+    assert a.allocate(4, 6 * 4)                # whole pool: evicts the rest
+    a.check_invariants()                       # reachability holds per-op
+    assert a.n_cached == 0
+    assert a.match_prefix(5, P) == 0           # tree fully evicted, cleanly
+    a.free(4)
+    a.check_invariants()
+
+
+def test_interior_eviction_deindexes_live_descendants():
+    """When every cached page is an interior node (live descendants pin
+    the leaves), eviction takes the LRU subtree: the cached ancestor is
+    reclaimed and live descendants merely lose their index entry — their
+    owners keep them, and they return to the free list (not the cache)
+    when finally released."""
+    a = SharedPagedAllocator(4, page_size=4)
+    P = list(range(8))
+    assert a.allocate(1, 8)
+    a.register_prefix(1, P)
+    # COW the FIRST page: its node becomes a cached *interior* node whose
+    # child (the second page) is live and still indexed
+    cw = a.prepare_write(1, 0, 1)
+    assert len(cw) == 1
+    a.check_invariants()
+    assert a.n_cached == 1
+    assert a.free_blocks == 2                  # 1 free + 1 reclaimable
+    # demand both reclaimable pages: no cached leaf exists, so the
+    # interior page goes with its subtree
+    assert a.allocate(2, 8)
+    a.check_invariants()
+    assert a.n_cached == 0
+    assert len(a.table_of(1)) == 2             # live descendant untouched
+    a.free(1)
+    a.free(2)
+    a.check_invariants()
+    assert a.free_blocks == 4                  # de-indexed page -> free list
+    assert a.n_cached == 0
+
+
 # ================================================================ model level
 def test_partial_table_chunked_prefill_bit_exact(tiny_model):
     """Chunked prefill over a partially pre-populated block table (the
@@ -357,15 +610,7 @@ def test_partial_table_chunked_prefill_bit_exact(tiny_model):
 
 
 # ================================================================ engines
-@pytest.fixture(scope="module")
-def shared_runner(tiny_model):
-    cfg, params = tiny_model
-    ecfg = PagedEngineConfig(page_size=8, n_pages=64, max_blocks_per_req=8,
-                             max_batch=4, token_budget=16,
-                             chunk_buckets=(8, 16), attn_backend="xla")
-    return PagedModelRunner(cfg, params, ecfg, n_sources=2)
-
-
+# (shared_runner comes session-scoped from conftest.py)
 def _stream(cfg, seed=3):
     """Request stream with full-duplicate, partial-prefix and unshared
     prompts (fresh Request objects per call)."""
