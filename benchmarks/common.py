@@ -34,3 +34,31 @@ def timed(fn, *args, reps: int = 1, **kw):
         out = fn(*args, **kw)
     dt = (time.perf_counter() - t0) / reps
     return out, dt * 1e6
+
+
+def warm_prefill_buckets(runner, cfg) -> None:
+    """Compile every (B, S) lane/chunk bucket a shared ``PagedModelRunner``
+    can dispatch (B capped by max_batch concurrent requests), using
+    padding-only batches (garbage block tables, zero chunk_lens). Serving
+    a couple of requests only reaches the B=1 buckets; without this sweep
+    the StepPlanner's fused B>1 dispatches compile inside timed regions
+    and corrupt the recorded perf trajectory."""
+    import jax.numpy as jnp
+    from repro.models.transformer import identity_placement
+    ecfg = runner.ecfg
+    pages = runner.init_pages()
+    placement = jnp.asarray(identity_placement(cfg))
+    # group size is capped by concurrent running requests (max_batch) AND
+    # the fusion limit (max_prefill_lanes); dispatches pad UP to the next
+    # lane bucket, so warm through the bucket covering that cap
+    top = runner.lane_bucket_for(
+        max(min(ecfg.max_batch, ecfg.max_prefill_lanes), 1))
+    for B in [b for b in ecfg.lane_buckets if b <= top]:
+        for S in ecfg.chunk_buckets:
+            batch = {"tokens": jnp.zeros((B, S), jnp.int32),
+                     "chunk_starts": jnp.zeros((B,), jnp.int32),
+                     "chunk_lens": jnp.zeros((B,), jnp.int32)}
+            runner.prefill_chunk(
+                batch, pages,
+                jnp.zeros((B, ecfg.max_blocks_per_req), jnp.int32),
+                placement, jnp.zeros((B,), jnp.int32))

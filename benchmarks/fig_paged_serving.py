@@ -20,7 +20,8 @@ import time
 
 import numpy as np
 
-from benchmarks.common import FAST, emit, save_json, timed
+from benchmarks.common import (FAST, emit, save_json, timed,
+                               warm_prefill_buckets)
 
 
 def _requests(cfg, n, seed=0):
@@ -82,10 +83,13 @@ def run() -> None:
     runner = PagedModelRunner(cfg, params, roomy, n_sources=2)
     n_req = 6 if FAST else 12
 
-    # warm every jit entry point (both chunk buckets + decode) so the timed
-    # runs measure steady-state serving, not compiles
+    # warm every jit entry point so the timed runs measure steady-state
+    # serving, not compiles: the 2-request serve covers decode; the
+    # padding-only sweep covers every (B, S) lane/chunk bucket the fused
+    # StepPlanner dispatches can reach
     t0 = time.perf_counter()
     _serve(cfg, params, runner, roomy, 2, seed=123)
+    warm_prefill_buckets(runner, cfg)
     compile_s = time.perf_counter() - t0
 
     r_roomy = _serve(cfg, params, runner, roomy, n_req, seed=0)

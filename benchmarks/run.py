@@ -4,13 +4,16 @@ Prints ``name,us_per_call,derived`` CSV lines. Set REPRO_BENCH_FAST=1 for a
 reduced grid (used by CI-style smoke runs).
 
 ``--smoke`` runs the MoE dispatch benchmark, the paged-serving end-to-end
-bench, the prefix-sharing differential bench and the prefix-affinity
-dispatch bench on reduced grids (CPU) and writes
-``experiments/bench/BENCH_moe_dispatch.json`` + ``BENCH_paged_serving.json``
-+ ``BENCH_prefix_sharing.json`` + ``BENCH_prefix_affinity.json`` — the
+bench, the prefix-sharing differential bench, the prefix-affinity
+dispatch bench and the batched-prefill planner bench on reduced grids
+(CPU) and writes ``experiments/bench/BENCH_moe_dispatch.json`` +
+``BENCH_paged_serving.json`` + ``BENCH_prefix_sharing.json`` +
+``BENCH_prefix_affinity.json`` + ``BENCH_batched_prefill.json`` — the
 perf-trajectory tracking entry points for CI. The affinity bench asserts
-``affinity_hit_rate > 0`` and bit-exact outputs, so a regression in the
-radix cache or the affinity signal fails the smoke lane fast.
+``affinity_hit_rate > 0`` and bit-exact outputs; the batched-prefill
+bench asserts bit-exact outputs with >= 2x fewer prefill dispatches —
+so a regression in the radix cache, the affinity signal or the
+StepPlanner lane fusion fails the smoke lane fast.
 """
 from __future__ import annotations
 
@@ -32,13 +35,15 @@ MODULES = [
     "benchmarks.fig_paged_serving",
     "benchmarks.fig_prefix_sharing",
     "benchmarks.fig_prefix_affinity",
+    "benchmarks.fig_batched_prefill",
     "benchmarks.roofline_table",
 ]
 
 SMOKE_MODULES = ["benchmarks.fig_ragged_dispatch",
                  "benchmarks.fig_paged_serving",
                  "benchmarks.fig_prefix_sharing",
-                 "benchmarks.fig_prefix_affinity"]
+                 "benchmarks.fig_prefix_affinity",
+                 "benchmarks.fig_batched_prefill"]
 
 
 def main() -> None:

@@ -58,6 +58,9 @@ def _report(reqs, engines, res):
     print(f"served {len(done)}/{len(reqs)} requests on {len(engines)} "
           f"paged engines ({res.signals['rounds']} cluster rounds)")
     print(f"dispatch decisions: {res.signals['decisions']}")
+    print(f"prefill dispatches: {res.signals['prefill_dispatches']} "
+          f"(avg {res.signals['prefill_lanes_per_dispatch']:.2f} "
+          f"lanes fused per dispatch)")
     print(f"preemptions: {res.signals['preemptions']}  "
           f"stalls: {res.signals['stalled']}  "
           f"kv peak: {res.signals['kv_peak']:.1%}")

@@ -20,7 +20,9 @@ from repro.core.profiler import ExpertProfiler
 from repro.core.queue_policy import QueueConfig, order_queue, order_queue_fcfs
 from repro.core.scheduler import (BaselineScheduler, GimbalScheduler,
                                   SchedulerConfig)
-from repro.core.traces import EngineTrace, PrefixSummary, TraceTable
+from repro.core.traces import (EngineTrace, PrefixSummary,
+                               PrefixSummaryDelta, TraceTable,
+                               diff_prefix_summary)
 
 __all__ = [
     "CoordinatorConfig", "GimbalCoordinator", "CalibrationResult",
@@ -30,5 +32,5 @@ __all__ = [
     "torus_distance_matrix", "total_objective", "ExpertProfiler",
     "QueueConfig", "order_queue", "order_queue_fcfs", "BaselineScheduler",
     "GimbalScheduler", "SchedulerConfig", "EngineTrace", "PrefixSummary",
-    "TraceTable",
+    "PrefixSummaryDelta", "diff_prefix_summary", "TraceTable",
 ]

@@ -13,7 +13,10 @@ engine ships on its trace. It reduces pre_rem_i (a hit engine prefills
 fewer tokens), never overrides the HighKV protection path (which runs
 first), and inside the CLOSE band only replaces the arbitrary round-robin
 tiebreak — it cannot create or suppress a CLOSE verdict, so the
-anti-oscillation property is preserved.
+anti-oscillation property is preserved. Compensation is affinity-aware on
+the same estimate: a dispatch expected to hit the cache charges only its
+expected *cold* prefill tokens, so back-to-back same-prefix bursts don't
+over-penalize the cache-holding engine.
 """
 from __future__ import annotations
 
@@ -40,6 +43,12 @@ class SchedulerConfig:
     # next trace arrives (its own prefill tokens + fixed decode allowance)
     comp_decode_allowance: float = 64.0
     comp_decay_s: float = 2.0            # compensation half-life (safety)
+    # affinity-aware compensation: a request dispatched onto the engine
+    # holding its prefix will prefill fewer tokens than prompt_len, so the
+    # expected hit is subtracted from its compensation — back-to-back
+    # same-prefix bursts then don't over-penalize the cache holder and
+    # scatter a family across cold engines. Off -> full-prompt charge.
+    affinity_compensation: bool = True
     # prefix-affinity credit: estimated cache-hit tokens (read off the
     # engines' radix prefix summaries) reduce that engine's pending-work
     # score — routing a request to the engine already holding its prefix
@@ -70,6 +79,12 @@ class GimbalScheduler:
 
     def include(self, engine_id: int) -> None:
         self._excluded.discard(engine_id)
+        # a re-included engine's prefix-summary delta chain is not
+        # trustworthy (its cache mutated while we ignored its traces, and
+        # an engine restart resets the version counter): demand a full
+        # digest on its next trace before crediting affinity again
+        if hasattr(self.traces, "request_resync"):
+            self.traces.request_resync(engine_id)
 
     def _engines(self) -> List[int]:
         return [e for e in self.traces.engine_ids if e not in self._excluded]
@@ -112,22 +127,37 @@ class GimbalScheduler:
                 + self._compensation(t.engine_id, now)
                 + self._p_kv(t.kv_usage) + self._p_moe(t.moe_pressure))
 
-    def _affinity_credits(self, traces: Dict[int, EngineTrace],
-                          prompt_tokens) -> Optional[Dict[int, float]]:
-        """Per-engine prefix-affinity credit for this request, or None when
-        the signal is off / absent (no prompt ids, weight 0, no engine
-        advertises a prefix summary, or no summary matches). Capped at
-        prompt_len - 1: the last prompt token is always recomputed."""
+    def _affinity_estimates(self, traces: Dict[int, EngineTrace],
+                            prompt_tokens) -> Optional[Dict[int, float]]:
+        """Raw per-engine cache-hit token estimates for this request, or
+        None when the signal is off / absent (no prompt ids, weight 0, no
+        engine advertises a prefix summary, or no summary matches). Capped
+        at prompt_len - 1: the last prompt token is always recomputed.
+        Callers scale by ``affinity_weight`` for the score credit; the
+        compensation path uses the raw tokens (expected skipped prefill
+        is a physical quantity, not a tunable preference)."""
         if prompt_tokens is None or len(prompt_tokens) <= 1 \
                 or self.cfg.affinity_weight <= 0.0:
             return None
         cap = float(len(prompt_tokens) - 1)
-        credits = {}
+        est = {}
         for e, t in traces.items():
             s = t.prefix_summary
-            est = s.estimate_hit_tokens(prompt_tokens) if s is not None else 0
-            credits[e] = self.cfg.affinity_weight * min(float(est), cap)
-        return credits if any(c > 0.0 for c in credits.values()) else None
+            hit = s.estimate_hit_tokens(prompt_tokens) if s is not None else 0
+            est[e] = min(float(hit), cap)
+        return est if any(v > 0.0 for v in est.values()) else None
+
+    def _charge_dispatch(self, chosen: int, prefill_tokens: float,
+                         estimates: Optional[Dict[int, float]],
+                         now: float) -> int:
+        """Record the dispatch in the compensation books, minus the
+        expected prefix hit on the chosen engine (affinity-aware
+        compensation). Returns ``chosen`` so call sites stay one line."""
+        tokens = prefill_tokens
+        if estimates is not None and self.cfg.affinity_compensation:
+            tokens = max(prefill_tokens - estimates.get(chosen, 0.0), 0.0)
+        self._add_compensation(chosen, tokens, now)
+        return chosen
 
     # ---- Algorithm 1 ----------------------------------------------------
     def _ordered_next(self, engines: List[int]) -> int:
@@ -169,7 +199,8 @@ class GimbalScheduler:
         scores = {e: self.score(traces[e], now) for e in engines}
         s_min = min(scores.values())
         s_max = max(scores.values())
-        credits = self._affinity_credits(traces, prompt_tokens)
+        estimates = self._affinity_estimates(traces, prompt_tokens)
+        w = self.cfg.affinity_weight
 
         # line 13-16: CLOSE guard. Within the band, affinity replaces the
         # arbitrary round-robin pick with the cache-holding engine — a
@@ -178,25 +209,24 @@ class GimbalScheduler:
                    self.cfg.close_rel * max(abs(s_max), 1.0),
                    0.05 * prefill_tokens)
         if s_max - s_min <= band:
-            if credits is not None:
+            if estimates is not None:
                 self.decisions["affinity_path"] += 1
-                c_max = max(credits.values())
-                chosen = min((e for e in engines if credits[e] == c_max),
+                c_max = max(estimates.values())
+                chosen = min((e for e in engines if estimates[e] == c_max),
                              key=lambda e: (scores[e], kv[e], e))
             else:
                 self.decisions["close_path"] += 1
                 chosen = self._ordered_next(engines)
-            self._add_compensation(chosen, prefill_tokens, now)
-            return chosen
+            return self._charge_dispatch(chosen, prefill_tokens,
+                                         estimates, now)
 
         # line 17: argmin by (score, kv, id), cache-hit credit included
         # (score() is linear in the credit, so subtract in place)
         self.decisions["score_path"] += 1
-        if credits is not None:
-            scores = {e: scores[e] - credits[e] for e in engines}
+        if estimates is not None:
+            scores = {e: scores[e] - w * estimates[e] for e in engines}
         chosen = min(engines, key=lambda e: (scores[e], kv[e], e))
-        self._add_compensation(chosen, prefill_tokens, now)
-        return chosen
+        return self._charge_dispatch(chosen, prefill_tokens, estimates, now)
 
 
 class BaselineScheduler:

@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, Optional, Sequence
+from typing import Dict, Optional, Sequence, Set, Tuple, Union
 
 
 @dataclasses.dataclass(frozen=True)
@@ -33,6 +33,9 @@ class PrefixSummary:
     block_size: int
     entries: Dict[int, int] = dataclasses.field(default_factory=dict)
     indexed_tokens: int = 0                 # total tokens in the tree
+    # the allocator's monotone index-mutation counter at digest time:
+    # deltas chain on it (apply only when base_version matches)
+    version: int = 0
 
     def estimate_hit_tokens(self, tokens: Sequence) -> int:
         """Estimated cache-hit tokens were ``tokens`` dispatched to this
@@ -45,6 +48,49 @@ class PrefixSummary:
             if depth:
                 return min(depth, len(tokens))
         return 0
+
+    def apply(self, delta: "PrefixSummaryDelta") -> "PrefixSummary":
+        """Reconstruct the successor full digest from a delta whose
+        ``base_version`` matches this summary's ``version``."""
+        assert delta.base_version == self.version, "delta chain broken"
+        entries = dict(self.entries)
+        for k in delta.removed:
+            entries.pop(k, None)
+        entries.update(delta.updates)
+        return PrefixSummary(block_size=delta.block_size, entries=entries,
+                             indexed_tokens=delta.indexed_tokens,
+                             version=delta.version)
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefixSummaryDelta:
+    """Incremental prefix-cache digest: only the fingerprints that changed
+    since the engine's previously shipped summary. Trees mutate rarely
+    relative to the trace cadence (most traces ship an empty delta), so
+    this is what rides ``EngineTrace.prefix_summary`` in steady state —
+    the :class:`TraceTable` folds deltas back into full summaries for the
+    scheduler, requesting a full-digest resync whenever the version chain
+    breaks (missed trace, engine restart, scheduler ``include()``)."""
+
+    block_size: int
+    base_version: int                       # full digest this applies to
+    version: int                            # digest version after applying
+    updates: Dict[int, int] = dataclasses.field(default_factory=dict)
+    removed: Tuple[int, ...] = ()
+    indexed_tokens: int = 0
+
+
+def diff_prefix_summary(prev: PrefixSummary,
+                        cur: PrefixSummary) -> PrefixSummaryDelta:
+    """Delta such that ``prev.apply(delta) == cur``."""
+    updates = {k: v for k, v in cur.entries.items()
+               if prev.entries.get(k) != v}
+    removed = tuple(k for k in prev.entries if k not in cur.entries)
+    return PrefixSummaryDelta(block_size=cur.block_size,
+                              base_version=prev.version,
+                              version=cur.version, updates=updates,
+                              removed=removed,
+                              indexed_tokens=cur.indexed_tokens)
 
 
 @dataclasses.dataclass
@@ -62,9 +108,12 @@ class EngineTrace:
     n_stalled: int = 0                      # decode lanes stalled last step:
                                             # KV growth failed even after
                                             # preemption (hard KV pressure)
-    # radix prefix-cache digest (None when the engine doesn't share);
-    # treated as immutable, so copy() sharing the object is sound
-    prefix_summary: Optional[PrefixSummary] = None
+    # radix prefix-cache digest (None when the engine doesn't share):
+    # a full PrefixSummary on first report / resync, a PrefixSummaryDelta
+    # in steady state — TraceTable.report folds deltas into the stored
+    # full digest, so scheduler reads always see a full summary. Treated
+    # as immutable, so copy() sharing the object is sound.
+    prefix_summary: Union[PrefixSummary, PrefixSummaryDelta, None] = None
     timestamp: float = 0.0
 
     def copy(self) -> "EngineTrace":
@@ -77,6 +126,11 @@ class TraceTable:
     def __init__(self, engine_ids):
         self._traces: Dict[int, Optional[EngineTrace]] = {
             e: None for e in engine_ids}
+        self._resync: Set[int] = set()     # engines owing a full digest
+        # last FULL digest received per engine: engines diff every delta
+        # against the last full digest they shipped (idempotent emission),
+        # so this — not the delta-applied reconstruction — is the base
+        self._delta_base: Dict[int, PrefixSummary] = {}
 
     @property
     def engine_ids(self):
@@ -84,7 +138,37 @@ class TraceTable:
 
     def report(self, trace: EngineTrace, now: Optional[float] = None) -> None:
         trace.timestamp = time.time() if now is None else now
+        s = trace.prefix_summary
+        if isinstance(s, PrefixSummaryDelta):
+            base = self._delta_base.get(trace.engine_id)
+            if trace.engine_id not in self._resync and base is not None \
+                    and base.version == s.base_version:
+                trace.prefix_summary = base.apply(s)
+            else:
+                # broken chain (fresh table, restarted engine, unknown
+                # base): keep the last known full reconstruction — stale
+                # but valid for a scheduling credit — and ask the engine
+                # for a full resync on its next trace
+                prev = self._traces.get(trace.engine_id)
+                stale = prev.prefix_summary if prev is not None else None
+                trace.prefix_summary = stale \
+                    if isinstance(stale, PrefixSummary) else None
+                self._resync.add(trace.engine_id)
+        elif isinstance(s, PrefixSummary):
+            self._delta_base[trace.engine_id] = s
+            self._resync.discard(trace.engine_id)
         self._traces[trace.engine_id] = trace
+
+    def needs_resync(self, engine_id: int) -> bool:
+        """True when this engine's next trace must carry a full digest
+        (never reported, chain broken, or a resync was requested)."""
+        return engine_id in self._resync \
+            or self._traces.get(engine_id) is None
+
+    def request_resync(self, engine_id: int) -> None:
+        """Force the next trace to ship a full digest (scheduler
+        ``include()`` after exclusion, engine restart, elastic rejoin)."""
+        self._resync.add(engine_id)
 
     def get(self, engine_id: int) -> Optional[EngineTrace]:
         return self._traces.get(engine_id)
@@ -100,9 +184,12 @@ class TraceTable:
         """Elastic scale-up: new engine starts with no trace (ordered dispatch
         covers it until its first report)."""
         self._traces.setdefault(engine_id, None)
+        self._resync.add(engine_id)        # no base to chain deltas onto
 
     def remove_engine(self, engine_id: int) -> None:
         self._traces.pop(engine_id, None)
+        self._resync.discard(engine_id)
+        self._delta_base.pop(engine_id, None)
 
     def stale_engines(self, timeout_s: float, now: Optional[float] = None):
         """Engines whose last report is older than ``timeout_s`` (health /

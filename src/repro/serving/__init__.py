@@ -10,6 +10,8 @@ from repro.serving.request import Request, RequestState
 from repro.serving.routing_sim import SourceExpertTraffic
 from repro.serving.simulator import (PAPER_SYSTEMS, SimResult, SystemConfig,
                                      simulate)
+from repro.serving.step_plan import (PlannerConfig, PrefillLane, StepPlan,
+                                     StepPlanner, check_plan_invariants)
 
 __all__ = ["CostModelConfig", "EngineCostModel", "DPEngine", "EngineConfig",
            "BlockPool", "SlotAllocator", "GARBAGE_PAGE",
@@ -17,4 +19,6 @@ __all__ = ["CostModelConfig", "EngineCostModel", "DPEngine", "EngineConfig",
            "PagedEngineConfig", "PagedModelRunner",
            "PagedRealEngine", "RealClusterConfig", "serve_real_cluster",
            "Request", "RequestState", "SourceExpertTraffic", "PAPER_SYSTEMS",
-           "SimResult", "SystemConfig", "simulate"]
+           "SimResult", "SystemConfig", "simulate",
+           "PlannerConfig", "PrefillLane", "StepPlan", "StepPlanner",
+           "check_plan_invariants"]

@@ -16,12 +16,12 @@ import numpy as np
 from repro.core.queue_policy import QueueConfig, order_queue, order_queue_fcfs
 from repro.core.traces import EngineTrace
 from repro.serving.costmodel import EngineCostModel
-from repro.serving.engine_util import (grow_with_cow, match_prefix_on_admit,
-                                       release_prefix_match,
+from repro.serving.engine_util import (PrefixSummaryShipper,
                                        select_preemption_victim)
 from repro.serving.kvcache import BlockPool
 from repro.serving.request import Request, RequestState
 from repro.serving.routing_sim import SourceExpertTraffic
+from repro.serving.step_plan import PlannerConfig, StepPlanner
 
 
 @dataclasses.dataclass(frozen=True)
@@ -32,6 +32,14 @@ class EngineConfig:
     kv_block: int = 16
     queue_policy: str = "sjf_aging"   # or "fcfs" (vLLM baseline)
     theta_age_s: float = 5.0
+    # StepPlanner packing knobs, mirroring PagedEngineConfig so the sim
+    # and real planes make the same packing decisions on the same trace:
+    # max_chunk caps one request's per-step prefill chunk (0 = budget is
+    # the only cap, the historical sim behavior); max_prefill_lanes is
+    # how many prefill lanes count as one fused data-plane dispatch
+    # (drives the prefill_dispatches telemetry the real plane measures)
+    max_chunk: int = 0
+    max_prefill_lanes: int = 8
     # ref-counted prefix cache (needs requests with prompt_tokens chains);
     # uses the SAME SharedPagedAllocator as the real paged engine, so
     # Algorithm 1 sees identical shared-aware kv_usage in sim and real
@@ -54,11 +62,28 @@ class DPEngine:
                 max(cfg.kv_tokens // cfg.kv_block, 1), cfg.kv_block)
         else:
             self.pool = BlockPool(cfg.kv_tokens, cfg.kv_block)
+        self._summary_shipper = PrefixSummaryShipper(self.pool) \
+            if cfg.prefix_sharing else None
         self.prefix_hit_tokens = 0
         self.waiting: List[Request] = []
         self.running: List[Request] = []
         self.finished: List[Request] = []
         self.qcfg = QueueConfig(theta_age_s=cfg.theta_age_s)
+        # the same planner class as PagedRealEngine over the same
+        # allocator types: packing/budget decisions agree across planes
+        # by construction (decode_reserve_extra=1 and the non-sharing
+        # never-preempt prefill path keep the sim's legacy conventions)
+        self.planner = StepPlanner(
+            PlannerConfig(token_budget=cfg.token_budget,
+                          max_running=cfg.max_running,
+                          chunk_cap=cfg.max_chunk,
+                          lanes_per_dispatch=cfg.max_prefill_lanes,
+                          sharing=cfg.prefix_sharing,
+                          decode_reserve_extra=1,
+                          prefill_preempt=cfg.prefix_sharing),
+            self.pool, self,
+            order_waiting=self._order_waiting,
+            preempt_one=self._preempt_one)
         # backend pressure inputs, refreshed by the coordinator each window
         self.moe_imbalance: float = 1.0
         self.remote_frac: float = 0.0
@@ -69,6 +94,8 @@ class DPEngine:
         self.busy_time = 0.0
         self.n_stalled_total = 0
         self._stalled_last = 0
+        self.prefill_dispatches = 0       # fused prefill data-plane calls
+        self.prefill_lanes_total = 0      # real lanes across those calls
 
     # ---- queue ----------------------------------------------------------
     def enqueue(self, req: Request, now: float) -> None:
@@ -88,34 +115,13 @@ class DPEngine:
         req.state = RequestState.WAITING
         self.waiting.append(req)
 
-    def _order_waiting(self, now: float) -> None:
+    def _order_waiting(self, waiting: List[Request],
+                       now: float) -> List[Request]:
         if self.cfg.queue_policy == "sjf_aging":
-            self.waiting = order_queue(self.waiting, now, self.qcfg)
-        else:
-            self.waiting = order_queue_fcfs(self.waiting, now)
+            return order_queue(waiting, now, self.qcfg)
+        return order_queue_fcfs(waiting, now)
 
-    # ---- admission / preemption -----------------------------------------
-    def _try_admit(self, now: float) -> None:
-        self._order_waiting(now)
-        admitted = []
-        for r in self.waiting:
-            if len(self.running) + len(admitted) >= self.cfg.max_running:
-                break
-            matched = match_prefix_on_admit(self.pool, r) \
-                if self.cfg.prefix_sharing else 0
-            first_chunk = min(r.remaining_prefill, self.cfg.token_budget)
-            if self.pool.allocate(r.req_id, r.context_len + first_chunk):
-                self.prefix_hit_tokens += r.prefill_done if matched else 0
-                r.state = RequestState.RUNNING
-                admitted.append(r)
-            else:
-                if matched:
-                    release_prefix_match(self.pool, r)
-                break  # FIFO-in-priority-order admission (no bypass)
-        for r in admitted:
-            self.waiting.remove(r)
-            self.running.append(r)
-
+    # ---- preemption ------------------------------------------------------
     def _preempt_one(self, protect: Optional[Request] = None) -> bool:
         """Evict the latest-arrived decoding request (vLLM recompute mode);
         the protected lane stalls instead when nothing else can yield."""
@@ -131,78 +137,21 @@ class DPEngine:
         self.waiting.append(victim)
         return True
 
-    def _grow(self, r: Request, need_tokens: int, write_lo: int,
-              write_hi: int) -> bool:
-        """Back the next write through the shared engine_util path:
-        allocate blocks and (under sharing) apply copy-on-write
-        *accounting* for tokens [write_lo, write_hi) — the simulator has
-        no physical pages, but the COW allocation must hit the books
-        identically to the real plane. False -> stall."""
-        return grow_with_cow(
-            self.pool, r, need_tokens, write_lo, write_hi,
-            sharing=self.cfg.prefix_sharing,
-            preempt_one=lambda req: self._preempt_one(protect=req))
-
-    # ---- one continuous-batching step -------------------------------------
+    # ---- one plan/execute step --------------------------------------------
     def step(self, now: float) -> Tuple[float, Optional[np.ndarray], Dict]:
-        """Returns (duration_s, routed_counts (L, E) or None, step_info)."""
-        self._try_admit(now)
+        """Returns (duration_s, routed_counts (L, E) or None, step_info).
 
-        decode_reqs = [r for r in self.running if r.remaining_prefill == 0]
-        prefill_reqs = [r for r in self.running if r.remaining_prefill > 0]
+        All control decisions (admission, KV growth/COW accounting,
+        preemption, token-budget packing) live in the shared
+        :class:`StepPlanner`; this method only prices and applies the
+        declarative plan through the cost model."""
+        plan = self.planner.plan(now)
+        self.prefix_hit_tokens += plan.prefix_hit_tokens
+        self._stalled_last = plan.n_stalled
+        self.n_stalled_total += plan.n_stalled
 
-        # KV growth for decoders; preempt under pressure. If even preemption
-        # cannot free a block, STALL the request for this step (it emits no
-        # token and holds its reservation) instead of decoding without the
-        # allocation — proceeding would corrupt the pool accounting.
-        stalled = 0
-        for r in list(decode_reqs):
-            if r.state is RequestState.PREEMPTED:  # evicted for an earlier lane
-                decode_reqs.remove(r)
-                continue
-            # write window mirrors the real plane: the token written this
-            # step sits at context_len - 1 (the newest sampled token is
-            # not yet stored); allocation keeps the sim's legacy
-            # context_len + 1 reservation convention
-            if not self._grow(r, r.context_len + 1, r.context_len - 1,
-                              r.context_len):
-                decode_reqs.remove(r)
-                stalled += 1
-        self._stalled_last = stalled
-        self.n_stalled_total += stalled
-        # a later lane's protected growth can evict a lane processed
-        # earlier in this loop — it must not receive decode effects
-        decode_reqs = [r for r in decode_reqs
-                       if r.state is not RequestState.PREEMPTED]
-
-        budget = max(self.cfg.token_budget - len(decode_reqs), 0)
-        prefill_work: List[Tuple[Request, int]] = []
-        for r in prefill_reqs:
-            if budget <= 0:
-                break
-            if r.state is RequestState.PREEMPTED:
-                continue
-            chunk = min(r.remaining_prefill, budget)
-            if self.cfg.prefix_sharing:
-                # sharing mirrors the paged real engine: prefill growth may
-                # preempt (same trace behavior under KV pressure, so
-                # Algorithm 1 sees consistent sim/real signals)
-                if not self._grow(r, r.prefill_done + chunk, r.prefill_done,
-                                  r.prefill_done + chunk):
-                    continue
-            elif not self.pool.allocate(r.req_id, r.prefill_done + chunk):
-                continue       # legacy sim path: skip, never preempt
-            prefill_work.append((r, chunk))
-            budget -= chunk
-
-        # prefill-side eviction (sharing) may have reclaimed lanes that
-        # were queued earlier in this step
-        decode_reqs = [r for r in decode_reqs
-                       if r.state is not RequestState.PREEMPTED]
-        prefill_work = [(r, c) for r, c in prefill_work
-                        if r.state is not RequestState.PREEMPTED]
-
-        n_prefill = sum(c for _, c in prefill_work)
+        decode_reqs = plan.decode
+        n_prefill = plan.prefill_tokens
         n_decode = len(decode_reqs)
         ctx = sum(r.context_len for r in decode_reqs)
         if n_prefill == 0 and n_decode == 0:
@@ -212,8 +161,9 @@ class DPEngine:
                                   self.moe_imbalance, self.remote_frac)
 
         # ---- apply step effects
-        for r, chunk in prefill_work:
-            r.prefill_done += chunk
+        for lane in plan.prefill_lanes:
+            r = lane.req
+            r.prefill_done += lane.chunk
             if self.cfg.prefix_sharing and r.prompt_tokens:
                 # mirror the paged real engine: mid-life registration stops
                 # at the page boundary (indexing the in-progress partial
@@ -236,6 +186,8 @@ class DPEngine:
 
         self.total_prefill_tokens += n_prefill
         self.total_decode_tokens += n_decode
+        self.prefill_dispatches += len(plan.prefill_groups)
+        self.prefill_lanes_total += len(plan.prefill_lanes)
         self.busy_time += dur
 
         routed = None
@@ -264,7 +216,8 @@ class DPEngine:
         self.finished.append(r)
 
     # ---- trace report -----------------------------------------------------
-    def trace(self, now: float) -> EngineTrace:
+    def trace(self, now: float, *,
+              full_prefix_summary: bool = False) -> EngineTrace:
         return EngineTrace(
             engine_id=self.engine_id,
             remaining_prefill_tokens=float(
@@ -278,7 +231,9 @@ class DPEngine:
             n_stalled=self._stalled_last,
             # same prefix-affinity digest as the real paged engine, off
             # the same allocator class — sim/real dispatch signals agree
-            prefix_summary=self.pool.prefix_summary()
+            # (full on first emit / resync, a delta otherwise)
+            prefix_summary=self._summary_shipper.emit(
+                full=full_prefix_summary)
             if self.cfg.prefix_sharing else None,
             timestamp=now,
         )

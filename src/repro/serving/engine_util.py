@@ -40,6 +40,44 @@ def drain_window_stats(stats_log: List[dict]):
     return np.asarray(B), np.asarray(A)
 
 
+class PrefixSummaryShipper:
+    """Delta transport for the radix prefix digest, shared by the real and
+    simulated engines: the full summary DFS runs only when the allocator's
+    ``summary_version`` moved, a full digest ships on the first emit or a
+    requested resync, and every other trace carries a cheap
+    :class:`~repro.core.traces.PrefixSummaryDelta` (usually tiny — trees
+    mutate rarely relative to the trace cadence).
+
+    Deltas are diffed against the last FULL digest shipped, not the last
+    emit, so ``emit`` is idempotent: a trace that never reaches the
+    :class:`~repro.core.traces.TraceTable` (an extra monitoring read, a
+    dropped report) cannot break the version chain — the next delivered
+    delta still applies to the table's stored base. The shipper re-bases
+    (ships a fresh full digest) once the delta outgrows half the digest,
+    bounding steady-state delta size."""
+
+    def __init__(self, pool):
+        self.pool = pool
+        self._cached = None       # last computed full digest
+        self._base = None         # last FULL digest shipped (delta base)
+
+    def emit(self, full: bool = False):
+        if self._cached is None \
+                or self._cached.version != self.pool.summary_version:
+            self._cached = self.pool.prefix_summary()
+        cur = self._cached
+        if full or self._base is None:
+            self._base = cur
+            return cur
+        from repro.core.traces import diff_prefix_summary
+        delta = diff_prefix_summary(self._base, cur)
+        if 2 * (len(delta.updates) + len(delta.removed)) \
+                > max(len(cur.entries), 1):
+            self._base = cur      # re-base: the delta is no longer cheap
+            return cur
+        return delta
+
+
 def match_prefix_on_admit(pool, req: Request) -> int:
     """Prefix-cache admission step shared by DPEngine and PagedRealEngine:
     attach the longest cached prefix — token-granular under the radix

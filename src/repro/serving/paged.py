@@ -110,15 +110,20 @@ class _RadixNode:
     *deepest* node's page per slot. Spans never cross a page boundary.
     """
 
-    __slots__ = ("tokens", "page", "depth", "parent", "children")
+    __slots__ = ("tokens", "page", "depth", "parent", "children",
+                 "expires_at")
 
     def __init__(self, tokens: List[int], page: int, depth: int,
-                 parent: Optional["_RadixNode"]):
+                 parent: Optional["_RadixNode"],
+                 expires_at: Optional[float] = None):
         self.tokens = list(tokens)
         self.page = page
         self.depth = depth
         self.parent = parent
         self.children: List["_RadixNode"] = []
+        # TTL policy for finish-time decode-token registrations: None
+        # means the entry never expires (the default for prompt pages)
+        self.expires_at = expires_at
 
     @property
     def end(self) -> int:
@@ -173,6 +178,12 @@ class SharedPagedAllocator(PagedBlockAllocator):
         self._cached: "OrderedDict[int, None]" = OrderedDict()
         self._matched: Dict[int, Tuple[int, int]] = {}  # rid -> (pages, toks)
         self.stat_evictions = 0
+        self.stat_expirations = 0
+        # monotone index-mutation counter: bumps whenever the radix tree
+        # changes shape (register/evict/expire). PrefixSummary stamps it,
+        # so engines can ship cheap deltas between unchanged versions and
+        # the trace table can validate delta chains (core/traces.py).
+        self.summary_version = 0
 
     # ---- tree walking ----------------------------------------------------
     def _best_child(self, node: _RadixNode, tokens: Sequence,
@@ -197,6 +208,7 @@ class SharedPagedAllocator(PagedBlockAllocator):
         simply stop being matchable — nothing cached is ever stranded
         unreachable behind an evicted interior node."""
         node.parent.children.remove(node)
+        self.summary_version += 1
         stack = [node]
         while stack:
             n = stack.pop()
@@ -318,14 +330,18 @@ class SharedPagedAllocator(PagedBlockAllocator):
         self.stat_hit_tokens_page += (d // self.block_size) * self.block_size
         return d
 
-    def register_prefix(self, req_id: int, tokens: Sequence) -> None:
+    def register_prefix(self, req_id: int, tokens: Sequence,
+                        expires_at: Optional[float] = None) -> None:
         """Index ``req_id``'s pages storing ``tokens`` (prompt prefix, or
         prompt + generated tokens at finish) so later arrivals share them —
         token-granular: the trailing partial page is indexed too. First
         writer wins: spans already covered by the tree keep their existing
         node (re-registering a grown prefix just extends the frontier).
         Only pages not yet indexed gain nodes; indexed pages are immutable
-        (COW guarantees a request's own written pages are private)."""
+        (COW guarantees a request's own written pages are private).
+        ``expires_at`` stamps a TTL on the *newly created* nodes (decode-
+        token caching policy): :meth:`expire_registrations` sweeps them;
+        nodes an earlier registration already owns keep their lifetime."""
         table = self.tables.get(req_id, [])
         ps = self.block_size
         limit = min(len(tokens), len(table) * ps)
@@ -343,11 +359,38 @@ class SharedPagedAllocator(PagedBlockAllocator):
             page = table[d // ps]
             if page in self._page_node:
                 break        # already indexed under another span
-            new = _RadixNode(span, page, d, node)
+            new = _RadixNode(span, page, d, node, expires_at=expires_at)
             node.children.append(new)
             self._page_node[page] = new
+            self.summary_version += 1
             node = new
             d = end
+
+    def expire_registrations(self, now: float) -> int:
+        """Evict radix entries whose TTL has lapsed (decode-token caching
+        policy). Deepest-first, so the common case — an expiring finish-
+        time tail under a permanent prompt prefix — drops exactly the
+        tail. An expired *interior* node takes its subtree with it (the
+        established eviction semantic: cached descendants are reclaimed,
+        live ones only lose their index entry). Returns entries evicted."""
+        expired: List[_RadixNode] = []
+        stack = list(self._root.children)
+        while stack:
+            n = stack.pop()
+            stack.extend(n.children)
+            if n.expires_at is not None and n.expires_at <= now:
+                expired.append(n)
+        n_evicted = 0
+        for n in sorted(expired, key=lambda n: -n.depth):
+            if n.page not in self._page_node:
+                continue      # already gone via an expired ancestor
+            cached_own = n.page in self._cached
+            self._evict(n)
+            if cached_own:    # _evict leaves the root page to its caller
+                self._free_ids.append(n.page)
+            n_evicted += 1
+            self.stat_expirations += 1
+        return n_evicted
 
     def prepare_write(self, req_id: int, start_tok: int,
                       end_tok: int) -> Optional[List[Tuple[int, int]]]:
@@ -428,7 +471,8 @@ class SharedPagedAllocator(PagedBlockAllocator):
             _, t = self._summary_dfs(c, (), entries)
             total += t
         return PrefixSummary(block_size=self.block_size, entries=entries,
-                             indexed_tokens=total)
+                             indexed_tokens=total,
+                             version=self.summary_version)
 
     def check_invariants(self) -> None:
         """Sharing-aware books must balance (test hook): every physical

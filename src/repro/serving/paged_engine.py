@@ -28,13 +28,13 @@ from repro.core.queue_policy import QueueConfig, order_queue
 from repro.core.traces import EngineTrace
 from repro.models import moe as moe_mod
 from repro.models import transformer as tfm
-from repro.serving.engine_util import (drain_window_stats, grow_with_cow,
-                                       match_prefix_on_admit,
-                                       pin_dispatch_mode,
-                                       release_prefix_match,
+from repro.serving.engine_util import (PrefixSummaryShipper,
+                                       drain_window_stats, pin_dispatch_mode,
                                        select_preemption_victim)
 from repro.serving.paged import PagedBlockAllocator, SharedPagedAllocator
 from repro.serving.request import Request, RequestState
+from repro.serving.step_plan import (PlannerConfig, PrefillLane,
+                                     StepPlanner, written_kv_len)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,10 +45,24 @@ class PagedEngineConfig:
     max_batch: int = 8                # decode lanes per step
     token_budget: int = 32            # per-step chunked-prefill budget
     chunk_buckets: Tuple[int, ...] = (8, 16, 32)   # padded prefill shapes
+    # batched chunked prefill: up to this many lanes fuse into ONE
+    # data-plane dispatch (padded to the next lane bucket; padding lanes
+    # write to the garbage page and are masked out of the MoE statistics)
+    max_prefill_lanes: int = 8
+    lane_buckets: Tuple[int, ...] = (1, 2, 4, 8)   # padded batch shapes
     theta_age_s: float = 5.0
     attn_backend: str = "auto"        # auto | pallas | xla
     interpret: bool = False           # Pallas interpret mode (CPU tests)
     prefix_sharing: bool = False      # ref-counted prefix cache + COW
+    # decode-token caching policy (prefix_sharing only): finish-time
+    # registration of prompt+generated tokens can be opted out per engine,
+    # gated on a minimum sequence length, and given a TTL after which the
+    # registered entries are evicted from the radix index. Mid-life
+    # page-aligned prompt registration is unaffected — these knobs govern
+    # only the token-granular finish-time (decode/n-gram) entries.
+    register_decode_tokens: bool = True
+    min_register_len: int = 0         # skip finish-time registration below
+    register_ttl_s: float = 0.0       # 0 = registrations never expire
 
     @property
     def max_len(self) -> int:
@@ -70,7 +84,7 @@ class PagedModelRunner:
         self.ragged_dispatch = (moe_mod.PERF["ragged_dispatch"]
                                 if ragged_dispatch is None
                                 else ragged_dispatch)
-        self._prefill_jits: Dict[int, object] = {}
+        self._prefill_jits: Dict[Tuple[int, int], object] = {}
         self._decode_jit = jax.jit(self._pin(self._decode_fn))
 
     def _pin(self, fn):
@@ -103,17 +117,29 @@ class PagedModelRunner:
 
     def prefill_chunk(self, batch, pages, block_tables, placement,
                       source_ids):
-        S = int(batch["tokens"].shape[1])
-        if S not in self._prefill_jits:       # one compile per chunk bucket
-            self._prefill_jits[S] = jax.jit(self._pin(self._prefill_fn))
-        return self._prefill_jits[S](self.params, batch, pages,
-                                     block_tables, placement, source_ids)
+        B, S = (int(batch["tokens"].shape[0]), int(batch["tokens"].shape[1]))
+        if (B, S) not in self._prefill_jits:  # one compile per (lane, chunk)
+            self._prefill_jits[(B, S)] = jax.jit(self._pin(self._prefill_fn))
+        return self._prefill_jits[(B, S)](self.params, batch, pages,
+                                          block_tables, placement, source_ids)
 
     def bucket_for(self, chunk: int) -> int:
         for b in self.ecfg.chunk_buckets:
             if chunk <= b:
                 return b
         return self.ecfg.chunk_buckets[-1]
+
+    def lane_bucket_for(self, n_lanes: int) -> int:
+        """Padded batch size for a fused prefill dispatch of ``n_lanes``."""
+        for b in self.ecfg.lane_buckets:
+            if n_lanes <= b:
+                return b
+        # unreachable when engines respect the constructor check
+        # (max_prefill_lanes <= lane_buckets[-1]); silently padding DOWN
+        # would drop lanes' block-table rows, so fail loudly instead
+        raise ValueError(
+            f"{n_lanes} prefill lanes exceed the largest lane bucket "
+            f"{self.ecfg.lane_buckets[-1]}")
 
     def init_pages(self):
         return tfm.init_paged_cache(self.cfg, self.ecfg.n_pages + 1,
@@ -141,6 +167,9 @@ class PagedRealEngine:
             "engine/runner page_size mismatch"
         assert self.ecfg.n_pages <= self.runner.ecfg.n_pages, \
             "engine pool larger than the runner's physical page arrays"
+        assert self.ecfg.max_prefill_lanes \
+            <= self.runner.ecfg.lane_buckets[-1], \
+            "engine fuses more prefill lanes than the runner's lane buckets"
         self.sharing = self.ecfg.prefix_sharing
         self.pool = (SharedPagedAllocator(self.ecfg.n_pages,
                                           self.ecfg.page_size)
@@ -148,11 +177,23 @@ class PagedRealEngine:
                      PagedBlockAllocator(self.ecfg.n_pages,
                                          self.ecfg.page_size))
         self.pages = self.runner.init_pages()
+        self._summary_shipper = PrefixSummaryShipper(self.pool) \
+            if self.sharing else None
         self.prefix_hit_tokens = 0        # prefill tokens skipped via cache
         self.waiting: List[Request] = []
         self.running: List[Request] = []
         self.finished: List[Request] = []
         self.qcfg = QueueConfig(theta_age_s=self.ecfg.theta_age_s)
+        self.planner = StepPlanner(
+            PlannerConfig(token_budget=self.ecfg.token_budget,
+                          max_running=self.ecfg.max_batch,
+                          chunk_cap=self.ecfg.chunk_buckets[-1],
+                          lanes_per_dispatch=self.ecfg.max_prefill_lanes,
+                          sharing=self.sharing),
+            self.pool, self,
+            order_waiting=lambda w, now: order_queue(w, now, self.qcfg),
+            preempt_one=self._preempt_one,
+            apply_copies=self._apply_cow)
         self.placement = np.asarray(tfm.identity_placement(cfg))
         self.moe_pressure: float = 0.0
         self.stats_log: List[Dict] = []
@@ -162,14 +203,8 @@ class PagedRealEngine:
         # per-step telemetry (mirrors DPEngine for the harness/bench)
         self.total_prefill_tokens = 0
         self.total_decode_tokens = 0
-
-    # ---- KV bookkeeping --------------------------------------------------
-    @staticmethod
-    def _kv_len(r: Request) -> int:
-        """Tokens currently in this request's pages. After prefill the pool
-        holds the prompt; each decode step writes the previously sampled
-        token, so the newest sampled token is not yet stored."""
-        return r.prefill_done + max(r.generated - 1, 0)
+        self.prefill_dispatches = 0       # fused prefill data-plane calls
+        self.prefill_lanes_total = 0      # real lanes across those calls
 
     # ---- admission -------------------------------------------------------
     def enqueue(self, req: Request, now: float) -> None:
@@ -192,27 +227,6 @@ class PagedRealEngine:
         req.state = RequestState.WAITING
         self.waiting.append(req)
 
-    def _try_admit(self, now: float) -> None:
-        self.waiting = order_queue(self.waiting, now, self.qcfg)
-        admitted = []
-        for r in self.waiting:
-            if len(self.running) + len(admitted) >= self.ecfg.max_batch:
-                break
-            matched = match_prefix_on_admit(self.pool, r) \
-                if self.sharing else 0
-            first = min(r.remaining_prefill, self.ecfg.token_budget)
-            if self.pool.allocate(r.req_id, r.prefill_done + first):
-                self.prefix_hit_tokens += r.prefill_done if matched else 0
-                r.state = RequestState.RUNNING
-                admitted.append(r)
-            else:
-                if matched:
-                    release_prefix_match(self.pool, r)
-                break   # FIFO-in-priority-order admission (no bypass)
-        for r in admitted:
-            self.waiting.remove(r)
-            self.running.append(r)
-
     def _preempt_one(self, protect: Optional[Request] = None) -> bool:
         """Evict the latest-arrived request (recompute mode): reclaim its
         pages and push it back through the queue."""
@@ -232,16 +246,6 @@ class PagedRealEngine:
     def _apply_cow(self, copies) -> None:
         self.pages = tfm.copy_pages(self.pages, copies)
 
-    def _grow(self, r: Request, need_tokens: int, write_lo: int,
-              write_hi: int) -> bool:
-        """Allocate + COW-protect the next write (shared engine_util path);
-        False means the caller must stall the lane this step."""
-        return grow_with_cow(
-            self.pool, r, need_tokens, write_lo, write_hi,
-            sharing=self.sharing,
-            preempt_one=lambda req: self._preempt_one(protect=req),
-            apply_copies=self._apply_cow)
-
     def _finish(self, r: Request, now: float) -> None:
         r.state = RequestState.FINISHED
         r.finish_time = now
@@ -250,104 +254,101 @@ class PagedRealEngine:
             # register everything the pages actually hold — prompt AND
             # generated tokens, token-granular including the partial tail
             # (the newest sampled token's KV is never written, hence the
-            # _kv_len cap) — so future prompts continuing this request's
-            # n-gram stream hit past the original prompt. Done only at
-            # finish: these pages take no further writes, so indexing
-            # them cannot trigger COW churn.
-            seq = list(r.prompt_tokens) + list(r.output_tokens or [])
-            self.pool.register_prefix(r.req_id, seq[:self._kv_len(r)])
+            # written_kv_len cap) — so future prompts continuing this
+            # request's n-gram stream hit past the original prompt. Done
+            # only at finish: these pages take no further writes, so
+            # indexing them cannot trigger COW churn. Policy knobs: the
+            # opt-out falls back to prompt-only registration,
+            # min_register_len gates the finish-time entry out entirely
+            # (measured on the sequence actually registered, after the
+            # opt-out truncation), register_ttl_s stamps an expiry the
+            # allocator sweeps.
+            seq = list(r.prompt_tokens)
+            if self.ecfg.register_decode_tokens:
+                seq += list(r.output_tokens or [])
+            seq = seq[:written_kv_len(r)]
+            if len(seq) >= self.ecfg.min_register_len:
+                ttl = self.ecfg.register_ttl_s
+                self.pool.register_prefix(
+                    r.req_id, seq,
+                    expires_at=(now + ttl) if ttl > 0 else None)
         self.pool.free(r.req_id)
         self.finished.append(r)
 
-    # ---- one continuous-batching step -------------------------------------
+    # ---- one plan/execute step --------------------------------------------
     def step(self, now: float) -> List[Request]:
-        self._try_admit(now)
+        """One continuous-batching step: the :class:`StepPlanner` makes all
+        control decisions (admission, growth/COW, preemption, token-budget
+        packing into fused lane groups); this method only executes the
+        declarative plan on the data plane."""
+        if self.sharing and self.ecfg.register_ttl_s > 0:
+            self.pool.expire_registrations(now)
+        plan = self.planner.plan(now)
+        self.prefix_hit_tokens += plan.prefix_hit_tokens
+        self._stalled_last = plan.n_stalled
+        self.n_stalled_total += plan.n_stalled
+
         finished: List[Request] = []
-
-        decode_reqs = [r for r in self.running if r.remaining_prefill == 0]
-        prefill_reqs = [r for r in self.running if r.remaining_prefill > 0]
-
-        # KV growth for decoders: preempt under pressure; if even preemption
-        # cannot free a page, STALL the lane this step (no token, no write)
-        # instead of decoding without backing pages.
-        stalled = 0
-        for r in list(decode_reqs):
-            if r.state is RequestState.PREEMPTED:   # evicted by an earlier lane
-                decode_reqs.remove(r)
-                continue
-            need = self._kv_len(r) + 1
-            if not self._grow(r, need, need - 1, need):
-                decode_reqs.remove(r)
-                stalled += 1
-        self._stalled_last = stalled
-        self.n_stalled_total += stalled
-
-        # chunked prefill under the step token budget (decode lanes first).
-        # Prefill growth may also preempt: without it, admitted prefills can
-        # fill the pool and deadlock waiting for each other's next chunk.
-        budget = max(self.ecfg.token_budget - len(decode_reqs), 0)
-        prefill_work: List[Tuple[Request, int]] = []
-        for r in prefill_reqs:
-            if budget <= 0:
-                break
-            if r.state is RequestState.PREEMPTED:
-                continue
-            chunk = min(r.remaining_prefill, budget,
-                        self.ecfg.chunk_buckets[-1])
-            need = r.prefill_done + chunk
-            if not self._grow(r, need, r.prefill_done, need):
-                continue
-            prefill_work.append((r, chunk))
-            budget -= chunk
-        # prefill-side eviction may have reclaimed decode lanes
-        decode_reqs = [r for r in decode_reqs
-                       if r.state is not RequestState.PREEMPTED]
-
-        for r, chunk in prefill_work:
-            if r.state is RequestState.PREEMPTED:   # evicted by a later lane
-                continue
-            self._run_prefill_chunk(r, chunk, now)
-            if r.state is RequestState.FINISHED:
-                finished.append(r)
-        if decode_reqs:
-            finished.extend(self._run_decode(decode_reqs, now))
-        if prefill_work or decode_reqs or stalled:
+        for group in plan.prefill_groups:
+            finished.extend(self._run_prefill_group(group, now))
+        if plan.decode:
+            finished.extend(self._run_decode(plan.decode, now))
+        if plan.has_work:
             self.step_count += 1
         return finished
 
     # ---- data-plane calls ------------------------------------------------
-    def _run_prefill_chunk(self, r: Request, chunk: int, now: float) -> None:
-        S = self.runner.bucket_for(chunk)
-        toks = np.zeros((1, S), np.int32)
-        toks[0, :chunk] = r.prompt_tokens[r.prefill_done:
-                                          r.prefill_done + chunk]
+    def _run_prefill_group(self, group: List[PrefillLane],
+                           now: float) -> List[Request]:
+        """One fused B-lane chunked-prefill dispatch. Lanes are padded to
+        the runner's (B, S) bucket; padding lanes get all-garbage block
+        tables and zero chunk_lens, so their rows write to page 0, attend
+        to nothing and are masked out of the MoE statistics."""
+        S = self.runner.bucket_for(max(l.chunk for l in group))
+        B = self.runner.lane_bucket_for(len(group))
+        toks = np.zeros((B, S), np.int32)
+        starts = np.zeros(B, np.int32)
+        lens = np.zeros(B, np.int32)
+        rids: List[Optional[int]] = [None] * B
+        for i, l in enumerate(group):
+            toks[i, :l.chunk] = l.req.prompt_tokens[l.start:l.start + l.chunk]
+            starts[i] = l.start
+            lens[i] = l.chunk
+            rids[i] = l.req.req_id
         batch = {"tokens": jnp.asarray(toks),
-                 "chunk_starts": jnp.asarray([r.prefill_done], jnp.int32),
-                 "chunk_lens": jnp.asarray([chunk], jnp.int32)}
+                 "chunk_starts": jnp.asarray(starts),
+                 "chunk_lens": jnp.asarray(lens)}
         bt = jnp.asarray(self.pool.block_table_array(
-            [r.req_id], self.ecfg.max_blocks_per_req))
+            rids, self.ecfg.max_blocks_per_req))
         logits, self.pages, stats = self.runner.prefill_chunk(
             batch, self.pages, bt, jnp.asarray(self.placement),
-            jnp.full((1,), self.engine_id, jnp.int32))
-        r.prefill_done += chunk
-        self.total_prefill_tokens += chunk
-        if self.sharing:
-            # full pages just completed become shareable (first writer
-            # wins). Mid-life registration is floored to the page boundary:
-            # indexing the in-progress partial page would force a COW on
-            # the very next chunk/decode write into it — the token-granular
-            # tail is registered once at finish instead.
-            full = r.prefill_done - r.prefill_done % self.ecfg.page_size
-            self.pool.register_prefix(r.req_id, r.prompt_tokens[:full])
+            jnp.full((B,), self.engine_id, jnp.int32))
+        self.prefill_dispatches += 1
+        self.prefill_lanes_total += len(group)
         if stats is not None:
             self.stats_log.append(jax.tree.map(np.asarray, stats))
-        if r.remaining_prefill == 0:
-            tok = int(jnp.argmax(logits[0]))
-            r.output_tokens = [tok]
-            r.generated = 1
-            r.first_token_time = now
-            if r.done:
-                self._finish(r, now)
+        finished = []
+        for i, l in enumerate(group):
+            r = l.req
+            r.prefill_done += l.chunk
+            self.total_prefill_tokens += l.chunk
+            if self.sharing:
+                # full pages just completed become shareable (first writer
+                # wins). Mid-life registration is floored to the page
+                # boundary: indexing the in-progress partial page would
+                # force a COW on the very next chunk/decode write into it —
+                # the token-granular tail is registered once at finish.
+                full = r.prefill_done - r.prefill_done % self.ecfg.page_size
+                self.pool.register_prefix(r.req_id, r.prompt_tokens[:full])
+            if r.remaining_prefill == 0:
+                tok = int(jnp.argmax(logits[i]))
+                r.output_tokens = [tok]
+                r.generated = 1
+                r.first_token_time = now
+                if r.done:
+                    self._finish(r, now)
+                    finished.append(r)
+        return finished
 
     def _run_decode(self, decode_reqs: List[Request],
                     now: float) -> List[Request]:
@@ -359,7 +360,7 @@ class PagedRealEngine:
         rids: List[Optional[int]] = [None] * B
         for i, r in enumerate(lanes):
             tokens[i] = r.output_tokens[-1]
-            lengths[i] = self._kv_len(r)
+            lengths[i] = written_kv_len(r)
             active[i] = True
             rids[i] = r.req_id
         bt = self.pool.block_table_array(rids, self.ecfg.max_blocks_per_req)
@@ -376,13 +377,14 @@ class PagedRealEngine:
             r.output_tokens.append(int(nxt[i]))
             r.generated += 1
             self.total_decode_tokens += 1
-            if r.done or self._kv_len(r) + 1 >= self.ecfg.max_len:
+            if r.done or written_kv_len(r) + 1 >= self.ecfg.max_len:
                 self._finish(r, now)
                 finished.append(r)
         return finished
 
     # ---- control-plane surface -------------------------------------------
-    def trace(self, now: float) -> EngineTrace:
+    def trace(self, now: float, *,
+              full_prefix_summary: bool = False) -> EngineTrace:
         return EngineTrace(
             engine_id=self.engine_id,
             remaining_prefill_tokens=float(
@@ -394,9 +396,10 @@ class PagedRealEngine:
             n_running=len(self.running),
             n_waiting=len(self.waiting),
             n_stalled=self._stalled_last,
-            # radix-cache digest: the scheduler's prefix-affinity signal
-            prefix_summary=self.pool.prefix_summary()
-            if self.sharing else None,
+            # radix-cache digest (the scheduler's prefix-affinity signal):
+            # full on first emit / requested resync, a delta otherwise
+            prefix_summary=self._summary_shipper.emit(
+                full=full_prefix_summary) if self.sharing else None,
             timestamp=now,
         )
 

@@ -102,7 +102,11 @@ def serve_real_cluster(requests: List[Request], engines, *,
             engines[eid].enqueue(r, now)
         for e in engines:
             e.step(now)
-            table.report(e.trace(now), now=now)
+            # delta-based prefix digests: ship a full summary only when
+            # the table lost the chain (first report, engine restart,
+            # scheduler include()) — steady-state traces carry deltas
+            table.report(e.trace(now, full_prefix_summary=table.needs_resync(
+                e.engine_id)), now=now)
             if hasattr(sched, "on_trace_refresh"):
                 sched.on_trace_refresh(e.engine_id)
             kv_peak = max(kv_peak, e.pool.usage) \
@@ -159,6 +163,14 @@ def serve_real_cluster(requests: List[Request], engines, *,
         "hit_tokens_page_aligned": sum(e.pool.stat_hit_tokens_page
                                        for e in engines
                                        if hasattr(e, "pool")),
+        # batched-prefill telemetry (StepPlanner packing): fused prefill
+        # data-plane dispatches and mean lanes per dispatch. Direct
+        # attribute access on purpose — every engine type declares the
+        # counters, so a refactor that drops them fails loudly here.
+        "prefill_dispatches": sum(e.prefill_dispatches for e in engines),
+        "prefill_lanes_per_dispatch": (
+            sum(e.prefill_lanes_total for e in engines)
+            / max(sum(e.prefill_dispatches for e in engines), 1)),
         "decisions": getattr(sched, "decisions", {}),
         "per_engine": {e.engine_id: sum(1 for r in requests
                                         if r.engine_id == e.engine_id

@@ -54,6 +54,11 @@ class RealModelEngine:
         # explicitly (always 0) so cluster telemetry sums stay honest
         # instead of getattr-defaulting this engine type out of the books
         self.prefix_hit_tokens = 0
+        # one-shot prefill = one dispatch per request (no lane fusion on
+        # the legacy slot plane); declared so cluster telemetry sums stay
+        # honest across engine types
+        self.prefill_dispatches = 0
+        self.prefill_lanes_total = 0
         self.waiting: List[Request] = []
         self.placement = np.asarray(identity_placement(cfg))
         self.qcfg = QueueConfig(theta_age_s=5.0)
@@ -121,6 +126,8 @@ class RealModelEngine:
                 return big.at[:, slot].set(small[:, 0])
             return big
         self.cache = jax.tree.map(put, self.cache, cache1)
+        self.prefill_dispatches += 1
+        self.prefill_lanes_total += 1
         tok = int(jnp.argmax(logits[0]))
         req.prefill_done = req.prompt_len
         req.generated = 1
@@ -165,7 +172,9 @@ class RealModelEngine:
         return finished
 
     # ---- traces ----------------------------------------------------------
-    def trace(self, now: float) -> EngineTrace:
+    def trace(self, now: float, *,
+              full_prefix_summary: bool = False) -> EngineTrace:
+        del full_prefix_summary     # no prefix cache on the legacy plane
         # honest signals: remaining prefill of admitted-but-unfinished
         # prefills (one-shot prefill makes this usually 0, but it is
         # *measured*, not hardcoded), queue pressure in prefill tokens

@@ -290,7 +290,8 @@ def simulate(requests: List[Request], system: SystemConfig, *,
             kick(eid, now)
         elif kind == "trace":
             for e in engines:
-                table.report(e.trace(now), now=now)
+                table.report(e.trace(now, full_prefix_summary=table.
+                                     needs_resync(e.engine_id)), now=now)
                 if sched is not None and hasattr(sched, "on_trace_refresh"):
                     sched.on_trace_refresh(e.engine_id)
             if any(e.has_work for e in engines):
@@ -353,6 +354,11 @@ def simulate(requests: List[Request], system: SystemConfig, *,
         "migrations": coord.placement.n_migrations,
         "decisions": getattr(sched, "decisions", {}),
         "preemptions": sum(r.n_preemptions for r in requests),
+        # StepPlanner packing telemetry, comparable with the real plane's
+        "prefill_dispatches": sum(e.prefill_dispatches for e in engines),
+        "prefill_lanes_per_dispatch": (
+            sum(e.prefill_lanes_total for e in engines)
+            / max(sum(e.prefill_dispatches for e in engines), 1)),
     }
     return res
 

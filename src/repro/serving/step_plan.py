@@ -1,0 +1,252 @@
+"""Declarative per-step planning for the serving engines (plan/execute).
+
+``StepPlanner`` is the single owner of the per-step *control* decisions a
+continuous-batching engine must make — admission (queue ordering + first
+KV reservation + prefix-cache attach), KV growth with copy-on-write,
+preemption under pressure, and token-budget packing of prefill chunks.
+It emits a declarative :class:`StepPlan` — decode lanes plus prefill
+lanes with per-lane chunk spans, already packed into fused dispatch
+groups — which a *data plane* then executes: the real paged engine runs
+one batched ``prefill_chunk_paged`` call per group (B > 1 lanes fused
+into one jit dispatch), the simulator prices the same plan through its
+cost model.
+
+Both planes instantiate the SAME planner class over the same allocator
+types, so packing/budget semantics cannot silently diverge between the
+simulated and real data planes — Algorithm 1's pressure signals
+(remaining/waiting prefill, kv_usage, stalls, dispatch counts) stay
+comparable by construction. Plane-specific conventions enter only
+through :class:`PlannerConfig` (the simulator's legacy ``context_len+1``
+decode reservation, its never-preempt non-sharing prefill path) and the
+host callbacks (queue policy, preemption victim, physical COW applies).
+
+The plan obeys invariants that :func:`check_plan_invariants` asserts
+(the property-test hook):
+
+* budget — decode lanes + planned prefill chunks never exceed the step
+  token budget (prefill packs into ``token_budget - n_decode``);
+* liveness — no planned lane references a preempted, stalled, waiting or
+  finished request; every planned request appears exactly once;
+* growth atomicity — every planned lane's block table already covers the
+  tokens the data plane will write (growth happened at plan time, with
+  preemption/stall fallback, never mid-execution);
+* grouping — prefill groups respect ``lanes_per_dispatch`` and preserve
+  packing order.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Tuple
+
+from repro.serving.engine_util import (grow_with_cow, match_prefix_on_admit,
+                                       release_prefix_match)
+from repro.serving.request import Request, RequestState
+
+
+@dataclasses.dataclass(frozen=True)
+class PlannerConfig:
+    """Packing/budget semantics of one engine's step planner."""
+
+    token_budget: int                 # per-step chunked-prefill token budget
+    max_running: int                  # admission cap on concurrent requests
+    chunk_cap: int = 0                # max prefill chunk per lane (0 = budget)
+    lanes_per_dispatch: int = 1       # prefill lanes fused per data-plane call
+    sharing: bool = False             # prefix cache + COW growth
+    # simulator legacy: reserve context_len + 1 tokens per decode step
+    # (one ahead of the write); the paged plane reserves exactly the write
+    decode_reserve_extra: int = 0
+    # may prefill growth preempt peers? The paged plane always may (without
+    # it admitted prefills deadlock waiting for each other's next chunk);
+    # the simulator's non-sharing path historically skips instead
+    prefill_preempt: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefillLane:
+    """One request's chunk span within a fused prefill dispatch."""
+
+    req: Request
+    start: int          # == req.prefill_done at plan time
+    chunk: int          # tokens to prefill this step (>= 1)
+
+
+@dataclasses.dataclass
+class StepPlan:
+    """Declarative step: what the data plane executes, nothing it decides."""
+
+    decode: List[Request]
+    prefill_groups: List[List[PrefillLane]]
+    n_stalled: int = 0
+    n_admitted: int = 0
+    prefix_hit_tokens: int = 0        # admission-time cache hits (sharing)
+
+    @property
+    def prefill_lanes(self) -> List[PrefillLane]:
+        return [l for g in self.prefill_groups for l in g]
+
+    @property
+    def prefill_tokens(self) -> int:
+        return sum(l.chunk for l in self.prefill_lanes)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.decode or self.prefill_groups or self.n_stalled)
+
+
+def written_kv_len(r: Request) -> int:
+    """Tokens currently stored in the request's KV: the prompt prefix plus
+    one page-written token per decode step already taken — the newest
+    sampled token's KV is never written yet. The single definition of the
+    written-KV convention: the planner's growth windows and the engines'
+    decode lengths / finish-time registration caps all read this."""
+    return r.prefill_done + max(r.generated - 1, 0)
+
+
+class StepPlanner:
+    """Admission + growth + packing for one engine (see module docstring).
+
+    The host engine provides its mutable queues (``waiting``/``running``
+    attributes) and three callbacks: ``order_waiting(waiting, now)`` (the
+    intra-engine queue policy), ``preempt_one(protect)`` (evict a victim,
+    reclaim its KV, requeue it — returns False when nothing can yield)
+    and optionally ``apply_copies(pairs)`` (apply COW page copies to the
+    physical arrays; None for the bookkeeping-only simulator).
+    """
+
+    def __init__(self, cfg: PlannerConfig, pool, host, *,
+                 order_waiting: Callable,
+                 preempt_one: Callable[[Optional[Request]], bool],
+                 apply_copies: Optional[Callable] = None):
+        self.cfg = cfg
+        self.pool = pool
+        self.host = host
+        self._order_waiting = order_waiting
+        self._preempt_one = preempt_one
+        self._apply_copies = apply_copies
+
+    # ---- admission -------------------------------------------------------
+    def _admit(self, now: float) -> Tuple[int, int]:
+        host = self.host
+        host.waiting = self._order_waiting(host.waiting, now)
+        admitted: List[Request] = []
+        hit_tokens = 0
+        for r in host.waiting:
+            if len(host.running) + len(admitted) >= self.cfg.max_running:
+                break
+            matched = match_prefix_on_admit(self.pool, r) \
+                if self.cfg.sharing else 0
+            first = min(r.remaining_prefill, self.cfg.token_budget)
+            if self.pool.allocate(r.req_id, r.prefill_done + first):
+                hit_tokens += r.prefill_done if matched else 0
+                r.state = RequestState.RUNNING
+                admitted.append(r)
+            else:
+                if matched:
+                    release_prefix_match(self.pool, r)
+                break   # FIFO-in-priority-order admission (no bypass)
+        for r in admitted:
+            host.waiting.remove(r)
+            host.running.append(r)
+        return len(admitted), hit_tokens
+
+    # ---- growth ----------------------------------------------------------
+    def _grow(self, r: Request, need_tokens: int, write_lo: int,
+              write_hi: int) -> bool:
+        return grow_with_cow(
+            self.pool, r, need_tokens, write_lo, write_hi,
+            sharing=self.cfg.sharing,
+            preempt_one=lambda req: self._preempt_one(req),
+            apply_copies=self._apply_copies)
+
+    # ---- the step plan ---------------------------------------------------
+    def plan(self, now: float) -> StepPlan:
+        n_admitted, hit_tokens = self._admit(now)
+        running = self.host.running
+
+        decode = [r for r in running if r.remaining_prefill == 0]
+        prefill = [r for r in running if r.remaining_prefill > 0]
+
+        # KV growth for decoders: preempt under pressure; if even
+        # preemption cannot free a page, STALL the lane this step (no
+        # token, no write) instead of decoding without backing pages.
+        stalled = 0
+        for r in list(decode):
+            if r.state is RequestState.PREEMPTED:   # evicted by earlier lane
+                decode.remove(r)
+                continue
+            kv = written_kv_len(r)
+            if not self._grow(r, kv + 1 + self.cfg.decode_reserve_extra,
+                              kv, kv + 1):
+                decode.remove(r)
+                stalled += 1
+
+        # chunked prefill under the step token budget (decode lanes first).
+        # Prefill growth may also preempt: without it, admitted prefills
+        # can fill the pool and deadlock waiting for each other's chunks.
+        budget = max(self.cfg.token_budget - len(decode), 0)
+        lanes: List[PrefillLane] = []
+        for r in prefill:
+            if budget <= 0:
+                break
+            if r.state is RequestState.PREEMPTED:
+                continue
+            chunk = min(r.remaining_prefill, budget)
+            if self.cfg.chunk_cap:
+                chunk = min(chunk, self.cfg.chunk_cap)
+            if self.cfg.sharing or self.cfg.prefill_preempt:
+                ok = self._grow(r, r.prefill_done + chunk, r.prefill_done,
+                                r.prefill_done + chunk)
+            else:   # simulator legacy non-sharing path: skip, never preempt
+                ok = self.pool.allocate(r.req_id, r.prefill_done + chunk)
+            if not ok:
+                continue
+            lanes.append(PrefillLane(r, r.prefill_done, chunk))
+            budget -= chunk
+
+        # growth for a later lane may have evicted one planned earlier —
+        # preempted requests must receive no data-plane effects this step
+        decode = [r for r in decode if r.state is not RequestState.PREEMPTED]
+        lanes = [l for l in lanes
+                 if l.req.state is not RequestState.PREEMPTED]
+
+        g = max(self.cfg.lanes_per_dispatch, 1)
+        groups = [lanes[i:i + g] for i in range(0, len(lanes), g)]
+        return StepPlan(decode=decode, prefill_groups=groups,
+                        n_stalled=stalled, n_admitted=n_admitted,
+                        prefix_hit_tokens=hit_tokens)
+
+
+def check_plan_invariants(plan: StepPlan, cfg: PlannerConfig, pool,
+                          running: List[Request]) -> None:
+    """Assert the StepPlan contract (property-test hook; see module doc)."""
+    seen = set()
+    for r in plan.decode:
+        assert r.state is RequestState.RUNNING and r in running, \
+            f"decode lane on non-running request {r.req_id}"
+        assert r.remaining_prefill == 0
+        assert r.req_id not in seen, f"request {r.req_id} planned twice"
+        seen.add(r.req_id)
+        held = pool.held_tokens(r.req_id)
+        assert held >= written_kv_len(r) + 1, \
+            f"decode write not backed for {r.req_id}: {held} tokens held"
+    budget = max(cfg.token_budget - len(plan.decode), 0)
+    assert plan.prefill_tokens <= budget, \
+        f"budget violated: {plan.prefill_tokens} > {budget}"
+    for g in plan.prefill_groups:
+        assert 1 <= len(g) <= max(cfg.lanes_per_dispatch, 1), \
+            "dispatch group exceeds lanes_per_dispatch"
+    for l in plan.prefill_lanes:
+        r = l.req
+        assert r.state is RequestState.RUNNING and r in running, \
+            f"prefill lane on non-running request {r.req_id}"
+        assert r.req_id not in seen, f"request {r.req_id} planned twice"
+        seen.add(r.req_id)
+        assert l.start == r.prefill_done, "stale chunk start"
+        assert 1 <= l.chunk <= r.remaining_prefill
+        if cfg.chunk_cap:
+            assert l.chunk <= cfg.chunk_cap
+        held = pool.held_tokens(r.req_id)
+        assert held >= l.start + l.chunk, \
+            f"prefill write not backed for {r.req_id}: {held} tokens held"
+    if hasattr(pool, "check_invariants"):
+        pool.check_invariants()

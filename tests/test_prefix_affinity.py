@@ -22,7 +22,8 @@ import numpy as np
 import pytest
 
 from repro.core import (EngineTrace, GimbalScheduler, PrefixSummary,
-                        SchedulerConfig, TraceTable)
+                        PrefixSummaryDelta, SchedulerConfig, TraceTable,
+                        diff_prefix_summary)
 from repro.serving import (PagedRealEngine, RealClusterConfig, Request,
                            RequestState, SharedPagedAllocator,
                            serve_real_cluster)
@@ -183,6 +184,141 @@ def test_affinity_off_bit_reproduces_dispatch():
         assert picks[0] == picks[1] == picks[2], f"diverged at {step}"
     assert scheds[0].decisions == scheds[1].decisions == scheds[2].decisions
     assert scheds[1].decisions["affinity_path"] == 0
+
+
+# ------------------------------------------------- affinity compensation
+def test_affinity_aware_compensation_keeps_bursts_on_cache_holder():
+    """Back-to-back same-prefix dispatches with NO trace refresh between:
+    affinity-aware compensation charges only the expected cold tokens, so
+    the second request stays on the cache holder; charging the full
+    prompt (affinity_compensation=False) scatters the family."""
+    prompt = list(range(200))
+    summary = _summary_of(prompt, ps=8, n_pages=64)
+
+    def run(comp_on):
+        tt = TraceTable([0, 1])
+        tt.report(EngineTrace(0), now=0.0)
+        tt.report(EngineTrace(1, prefix_summary=summary), now=0.0)
+        s = GimbalScheduler(tt, SchedulerConfig(
+            affinity_compensation=comp_on))
+        return [s.select_engine(len(prompt), 0.0, prompt_tokens=prompt)
+                for _ in range(2)]
+
+    assert run(True) == [1, 1]
+    assert run(False) == [1, 0]
+
+
+def test_compensation_unchanged_without_affinity_signal():
+    """Without prompt ids (or with weight 0) the dispatch charge is the
+    full prompt — bit-compatible with the affinity-free books."""
+    tt = TraceTable([0, 1])
+    for e in (0, 1):
+        tt.report(EngineTrace(e), now=0.0)
+    s = GimbalScheduler(tt)
+    s.select_engine(100.0, 0.0)
+    charged = [e for e in (0, 1) if s._compensation(e, 0.0) > 0]
+    assert len(charged) == 1
+    assert s._compensation(charged[0], 0.0) == pytest.approx(
+        100.0 + s.cfg.comp_decode_allowance)
+
+
+# ------------------------------------------------------- summary deltas
+def test_prefix_summary_delta_roundtrip():
+    """diff/apply reconstructs the successor digest exactly, and version
+    stamps chain on the allocator's mutation counter."""
+    a = SharedPagedAllocator(32, 8)
+    assert a.allocate(1, 20)
+    a.register_prefix(1, list(range(20)))
+    s1 = a.prefix_summary()
+    assert a.allocate(2, 12)
+    a.register_prefix(2, [900] + list(range(11)))
+    a.free(1)
+    s2 = a.prefix_summary()
+    d = diff_prefix_summary(s1, s2)
+    assert isinstance(d, PrefixSummaryDelta)
+    assert d.base_version == s1.version and d.version == s2.version
+    assert s1.apply(d) == s2
+    # version-stable digests produce empty deltas (the steady state)
+    d0 = diff_prefix_summary(s2, a.prefix_summary())
+    assert not d0.updates and not d0.removed
+
+
+def test_trace_table_folds_deltas_and_resyncs():
+    """The table reconstructs full digests from engine deltas; emission is
+    idempotent (an unreported/dropped trace cannot break the chain, since
+    deltas always diff against the last FULL digest shipped); a broken
+    chain (scheduler include(), engine restart) keeps the stale full
+    digest and demands a full resync before trusting deltas again."""
+    from repro.serving.engine_util import PrefixSummaryShipper
+    a = SharedPagedAllocator(64, 8)
+    for i, t0 in enumerate((100, 200, 300, 400)):    # 4 distinct prefixes
+        assert a.allocate(i, 8)
+        a.register_prefix(i, [t0 + j for j in range(8)])
+        a.free(i)
+    ship = PrefixSummaryShipper(a)
+    tt = TraceTable([0])
+    assert tt.needs_resync(0)                    # never reported
+    full = ship.emit(full=tt.needs_resync(0))
+    assert isinstance(full, PrefixSummary)
+    tt.report(EngineTrace(0, prefix_summary=full), now=0.0)
+    assert not tt.needs_resync(0)
+
+    # a small change on a populated tree ships as a delta
+    assert a.allocate(9, 16)
+    a.register_prefix(9, [100 + j for j in range(8)] + [7] * 8)
+    a.free(9)
+    d = ship.emit(full=tt.needs_resync(0))
+    assert isinstance(d, PrefixSummaryDelta)
+    # idempotent: an extra emit whose trace is never reported (monitoring
+    # read, dropped report) produces the same delta — no chain break
+    assert ship.emit(full=False) == d
+    tt.report(EngineTrace(0, prefix_summary=d), now=0.1)
+    assert tt.get(0).prefix_summary == a.prefix_summary()
+    # steady state: unchanged tree -> the same stable delta against the
+    # shipped base (cumulative by design), still applies cleanly
+    d0 = ship.emit(full=False)
+    assert d0 == d
+    tt.report(EngineTrace(0, prefix_summary=d0), now=0.15)
+    assert tt.get(0).prefix_summary == a.prefix_summary()
+
+    # scheduler include() (exclusion lifted / engine restart) demands a
+    # full digest; a delta arriving meanwhile keeps the last-known full
+    s = GimbalScheduler(tt)
+    s.exclude(0)
+    s.include(0)
+    assert tt.needs_resync(0)
+    assert a.allocate(10, 8)
+    a.register_prefix(10, [5] * 8)
+    a.free(10)
+    d2 = ship.emit(full=False)
+    tt.report(EngineTrace(0, prefix_summary=d2), now=0.2)
+    assert tt.needs_resync(0)                    # still owed a full digest
+    stale = tt.get(0).prefix_summary
+    assert isinstance(stale, PrefixSummary)      # stale but usable credit
+    full2 = ship.emit(full=tt.needs_resync(0))
+    assert isinstance(full2, PrefixSummary)
+    tt.report(EngineTrace(0, prefix_summary=full2), now=0.3)
+    assert not tt.needs_resync(0)
+    assert tt.get(0).prefix_summary == a.prefix_summary()
+
+
+def test_dpengine_trace_ships_deltas():
+    """Engine-side transport: full digest on the first trace or on
+    request, deltas in steady state, and the digest DFS is version-cached
+    (no recompute while the tree is unchanged)."""
+    from repro.serving import DPEngine, EngineConfig
+    from repro.serving.costmodel import CostModelConfig, EngineCostModel
+    e = DPEngine(0, EngineConfig(kv_tokens=2048, kv_block=16,
+                                 prefix_sharing=True),
+                 EngineCostModel(CostModelConfig()))
+    t1 = e.trace(0.0)
+    assert isinstance(t1.prefix_summary, PrefixSummary)
+    t2 = e.trace(0.1)
+    assert isinstance(t2.prefix_summary, PrefixSummaryDelta)
+    assert not t2.prefix_summary.updates        # unchanged tree
+    t3 = e.trace(0.2, full_prefix_summary=True)
+    assert isinstance(t3.prefix_summary, PrefixSummary)
+    assert t3.prefix_summary == t1.prefix_summary
 
 
 # ------------------------------------------------------- simulated plane

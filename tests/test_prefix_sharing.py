@@ -574,6 +574,110 @@ def test_interior_eviction_deindexes_live_descendants():
     assert a.n_cached == 0
 
 
+# ================================================== decode-cache policy knobs
+def test_register_ttl_expires_decode_entries():
+    """Finish-time registrations stamped with a TTL are swept by
+    ``expire_registrations``; entries registered without one (the prompt
+    index) are permanent. Books stay balanced through the sweep."""
+    a = SharedPagedAllocator(16, page_size=4)
+    prompt, gen = list(range(8)), [500, 501, 502, 503]
+    assert a.allocate(1, 12)
+    a.register_prefix(1, prompt)                     # permanent
+    a.register_prefix(1, prompt + gen, expires_at=1.0)   # decode tail
+    a.free(1)
+    a.check_invariants()
+    m = a.match_prefix(2, prompt + gen)
+    assert m == 12
+    a.free(2)
+
+    assert a.expire_registrations(0.5) == 0          # not due yet
+    assert a.match_prefix(3, prompt + gen) == 12
+    a.free(3)
+
+    assert a.expire_registrations(1.5) == 1          # the gen node only
+    a.check_invariants()
+    assert a.stat_expirations == 1
+    assert a.match_prefix(4, prompt + gen) == 8      # prompt still indexed
+    a.free(4)
+    a.check_invariants()
+
+
+def test_expired_live_page_only_loses_its_index_entry():
+    """Sweeping an expired entry whose page a live request still holds
+    must de-index it without touching the owner's table."""
+    a = SharedPagedAllocator(16, page_size=4)
+    toks = list(range(8))
+    assert a.allocate(1, 8)
+    a.register_prefix(1, toks, expires_at=1.0)
+    assert a.expire_registrations(2.0) == 2
+    a.check_invariants()
+    assert len(a.table_of(1)) == 2                   # owner unaffected
+    assert a.match_prefix(2, toks) == 0              # but unmatchable now
+    a.free(1)
+    a.check_invariants()
+    assert a.free_blocks == 16                       # nothing cached
+
+
+def test_decode_register_policy_knobs(tiny_model, shared_runner):
+    """PagedEngineConfig policy knobs for finish-time radix registration:
+    default registers prompt+generated token-granular (n-gram reuse),
+    ``register_decode_tokens=False`` registers the prompt only,
+    ``min_register_len`` gates short sequences out entirely (leaving the
+    page-floored mid-life prompt registration), and ``register_ttl_s``
+    expires the finish-time entries on a later step."""
+    cfg, params = tiny_model
+    base = dataclasses.replace(shared_runner.ecfg, n_pages=32,
+                               prefix_sharing=True)
+    prompt = np.random.default_rng(33).integers(
+        0, cfg.vocab_size, 10).tolist()
+
+    def serve(**kw):
+        e = PagedRealEngine(0, cfg, params, dataclasses.replace(base, **kw),
+                            runner=shared_runner, n_sources=2)
+        r = Request(req_id=0, prompt_len=10, max_new_tokens=4,
+                    arrival_time=0.0, prompt_tokens=list(prompt))
+        _drive_arrivals(e, [r])
+        assert r.state is RequestState.FINISHED and not r.error
+        return e, r
+
+    def probe_match(e, toks):
+        m = e.pool.match_prefix(999, toks)
+        e.pool.release_match(999)
+        e.pool.check_invariants()
+        return m
+
+    # default: prompt + generated, token-granular, capped at written KV
+    # (10 prompt + 4 generated, newest sampled token never written -> 13)
+    e, r = serve()
+    probe = prompt + list(r.output_tokens)
+    assert probe_match(e, probe) == 13
+
+    # per-engine opt-out: the full prompt still registers (token-granular
+    # at finish), generated tokens never do
+    e, r = serve(register_decode_tokens=False)
+    assert probe_match(e, prompt + list(r.output_tokens)) == 10
+
+    # min length: finish-time registration skipped below the threshold —
+    # only the page-floored mid-life prompt registration remains
+    e, r = serve(min_register_len=64)
+    assert probe_match(e, prompt + list(r.output_tokens)) == 8
+
+    # the gate measures the sequence actually registered: with the
+    # decode opt-out the prompt-only entry (10 tokens) is below a
+    # threshold the prompt+generated length (13) would have passed
+    e, r = serve(register_decode_tokens=False, min_register_len=12)
+    assert probe_match(e, prompt + list(r.output_tokens)) == 8
+
+    # TTL: finish-time entries expire on a later (even idle) step; the
+    # mid-life page-aligned prompt entries are permanent
+    e, r = serve(register_ttl_s=0.5)
+    assert probe_match(e, prompt + list(r.output_tokens)) == 13
+    e.step(r.finish_time + 1.0)       # idle step runs the expiry sweep
+    e.pool.check_invariants()
+    assert e.pool.stat_expirations > 0
+    assert probe_match(e, prompt + list(r.output_tokens)) == 8
+
+
 # ================================================================ model level
 def test_partial_table_chunked_prefill_bit_exact(tiny_model):
     """Chunked prefill over a partially pre-populated block table (the
