@@ -1,0 +1,142 @@
+"""Fault-recovery smoke bench (BENCH_fault_recovery).
+
+Serves the same request stream on a 2-engine paged cluster twice:
+
+* ``fault_free`` — no faults (reference outputs + baseline wall-clock);
+* ``crash``      — engine 1 crashes mid-run (KV pool lost) and later
+                   recovers: the health monitor fences it, its resident
+                   requests re-dispatch to engine 0 with emitted tokens
+                   folded into resume prompts, and the restarted engine
+                   rejoins on a fresh trace.
+
+Asserts the recovery invariants the chaos harness proves
+(tests/test_faults.py): every request completes with its full token
+budget, nothing is lost, duplicated or errored, and outputs are bit-exact
+vs the fault-free run. Reports the recovery tax — re-prefilled tokens and
+wall-clock overhead vs fault-free. Emits
+``experiments/bench/BENCH_fault_recovery.json``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from benchmarks.common import FAST, emit, save_json, warm_prefill_buckets
+
+
+def _requests(cfg, n, seed=5):
+    from repro.serving import Request
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        plen = int(rng.integers(8, 24))
+        reqs.append(Request(
+            req_id=i, prompt_len=plen,
+            max_new_tokens=int(rng.integers(4, 8)),
+            arrival_time=0.08 * i,
+            prompt_tokens=rng.integers(0, cfg.vocab_size, plen).tolist()))
+    return reqs
+
+
+def _serve(cfg, params, runner, ecfg, n_req, *, fault_plan=None):
+    from repro.ft.health import HealthConfig
+    from repro.serving import (PagedRealEngine, RealClusterConfig,
+                               RequestState, serve_real_cluster)
+    engines = [PagedRealEngine(i, cfg, params, ecfg, runner=runner,
+                               n_sources=2) for i in range(2)]
+    reqs = _requests(cfg, n_req)
+    t0 = time.perf_counter()
+    res = serve_real_cluster(
+        reqs, engines,
+        cluster_cfg=RealClusterConfig(
+            window_tokens=250, fault_plan=fault_plan,
+            health_cfg=HealthConfig(trace_timeout_s=0.3)))
+    wall = time.perf_counter() - t0
+    for e in engines:
+        e.pool.check_invariants()
+    done = sum(1 for r in reqs if r.state is RequestState.FINISHED
+               and not r.error)
+    return reqs, res, {
+        "served": done, "n_requests": len(reqs), "wall_s": wall,
+        "rounds": res.signals["rounds"],
+        "n_failures": res.signals["n_failures"],
+        "recovered_requests": res.signals["recovered_requests"],
+        "recovery_recompute_tokens":
+            res.signals["recovery_recompute_tokens"],
+        "shed_requests": res.signals["shed_requests"],
+        "quarantined": res.signals["quarantined"],
+        "health_events": res.signals["health_events"],
+    }
+
+
+def run() -> None:
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.configs.base import reduced
+    from repro.ft import FaultEvent, FaultPlan
+    from repro.models import build_model
+    from repro.serving import PagedEngineConfig, PagedModelRunner
+
+    cfg = reduced(get_smoke_config("qwen3-moe-30b-a3b"), n_layers=2)
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    ecfg = PagedEngineConfig(page_size=8, n_pages=48, max_blocks_per_req=6,
+                             max_batch=4, token_budget=16,
+                             chunk_buckets=(8, 16), attn_backend="xla")
+    runner = PagedModelRunner(cfg, params, ecfg, n_sources=2)
+    n_req = 8 if FAST else 16
+
+    t0 = time.perf_counter()
+    _serve(cfg, params, runner, ecfg, 2)      # warm all jit entry points
+    warm_prefill_buckets(runner, cfg)
+    compile_s = time.perf_counter() - t0
+
+    base_reqs, _, r_base = _serve(cfg, params, runner, ecfg, n_req)
+    want = {r.req_id: r.output_tokens for r in base_reqs}
+
+    # kill engine 1 while it holds residents; recover it mid-tail
+    plan = FaultPlan(events=(FaultEvent("crash", 1, 10),
+                             FaultEvent("recover", 1, 22)))
+    reqs, res, r_crash = _serve(cfg, params, runner, ecfg, n_req,
+                                fault_plan=plan)
+
+    from repro.serving import RequestState
+    assert r_crash["served"] == n_req, \
+        f"lost requests under crash: {r_crash['served']}/{n_req}"
+    assert not any(r.error for r in reqs)
+    assert all(r.state is RequestState.FINISHED for r in reqs)
+    assert r_crash["n_failures"] == 1
+    assert r_crash["recovered_requests"] >= 1, \
+        "crash landed on an idle engine — no recovery exercised"
+    for r in reqs:
+        assert r.full_output_tokens == want[r.req_id], \
+            f"req {r.req_id} diverged after recovery"
+
+    tax = r_crash["wall_s"] / max(r_base["wall_s"], 1e-9) - 1.0
+    emit("fault_recovery_fault_free", r_base["wall_s"] * 1e6,
+         f"served={r_base['served']}")
+    emit("fault_recovery_crash", r_crash["wall_s"] * 1e6,
+         f"recovered={r_crash['recovered_requests']} "
+         f"recompute_tok={r_crash['recovery_recompute_tokens']} "
+         f"wall_tax={tax:.2f}")
+    payload = {
+        "config": {"model": cfg.name, "n_layers": cfg.n_layers,
+                   "n_requests": n_req, "page_size": ecfg.page_size,
+                   "n_pages": ecfg.n_pages, "backend": ecfg.attn_backend,
+                   "plan": [dataclasses.asdict(ev) for ev in plan.events]},
+        "fault_free": r_base,
+        "crash": r_crash,
+        "wall_overhead_frac": tax,
+        "bit_exact_vs_fault_free": True,     # asserted above
+        "compile_s": compile_s,
+    }
+    path = save_json("BENCH_fault_recovery", payload)
+    emit("fault_recovery_headline", 0.0,
+         f"served={r_crash['served']}/{n_req} "
+         f"failures={r_crash['n_failures']} "
+         f"recovered={r_crash['recovered_requests']} json={path}")
+
+
+if __name__ == "__main__":
+    run()

@@ -5,15 +5,18 @@ reduced grid (used by CI-style smoke runs).
 
 ``--smoke`` runs the MoE dispatch benchmark, the paged-serving end-to-end
 bench, the prefix-sharing differential bench, the prefix-affinity
-dispatch bench and the batched-prefill planner bench on reduced grids
-(CPU) and writes ``experiments/bench/BENCH_moe_dispatch.json`` +
+dispatch bench, the batched-prefill planner bench and the fault-recovery
+bench on reduced grids (CPU) and writes
+``experiments/bench/BENCH_moe_dispatch.json`` +
 ``BENCH_paged_serving.json`` + ``BENCH_prefix_sharing.json`` +
-``BENCH_prefix_affinity.json`` + ``BENCH_batched_prefill.json`` — the
-perf-trajectory tracking entry points for CI. The affinity bench asserts
-``affinity_hit_rate > 0`` and bit-exact outputs; the batched-prefill
-bench asserts bit-exact outputs with >= 2x fewer prefill dispatches —
-so a regression in the radix cache, the affinity signal or the
-StepPlanner lane fusion fails the smoke lane fast.
+``BENCH_prefix_affinity.json`` + ``BENCH_batched_prefill.json`` +
+``BENCH_fault_recovery.json`` — the perf-trajectory tracking entry points
+for CI. The affinity bench asserts ``affinity_hit_rate > 0`` and
+bit-exact outputs; the batched-prefill bench asserts bit-exact outputs
+with >= 2x fewer prefill dispatches; the fault-recovery bench kills an
+engine mid-run and asserts every request still completes bit-exact — so
+a regression in the radix cache, the affinity signal, the StepPlanner
+lane fusion or the crash-recovery path fails the smoke lane fast.
 """
 from __future__ import annotations
 
@@ -36,6 +39,7 @@ MODULES = [
     "benchmarks.fig_prefix_sharing",
     "benchmarks.fig_prefix_affinity",
     "benchmarks.fig_batched_prefill",
+    "benchmarks.fig_fault_recovery",
     "benchmarks.roofline_table",
 ]
 
@@ -43,7 +47,8 @@ SMOKE_MODULES = ["benchmarks.fig_ragged_dispatch",
                  "benchmarks.fig_paged_serving",
                  "benchmarks.fig_prefix_sharing",
                  "benchmarks.fig_prefix_affinity",
-                 "benchmarks.fig_batched_prefill"]
+                 "benchmarks.fig_batched_prefill",
+                 "benchmarks.fig_fault_recovery"]
 
 
 def main() -> None:

@@ -15,7 +15,14 @@ ship radix prefix summaries on their traces, so Algorithm 1's
 prefix-affinity credit routes repeated prefixes to the engine already
 holding them (the ``affinity`` dispatch count in the report).
 
-PYTHONPATH=src python examples/serve_moe_paged.py [--shared-prefix]
+With ``--chaos`` the same stream is served twice — fault-free, then under
+a deterministic :class:`~repro.ft.faults.FaultPlan` that crashes engine 1
+mid-run (KV pool lost) and recovers it later: the health monitor fences
+the silent engine, its residents re-dispatch with emitted tokens folded
+into resume prompts, and the run proves every request completes bit-exact
+vs the fault-free pass.
+
+PYTHONPATH=src python examples/serve_moe_paged.py [--shared-prefix|--chaos]
 """
 import dataclasses
 
@@ -42,11 +49,12 @@ def _requests(cfg, rng, n=12, system=None):
     return reqs
 
 
-def _serve(cfg, params, runner, ecfg, reqs):
+def _serve(cfg, params, runner, ecfg, reqs, **cluster_kw):
     engines = [PagedRealEngine(i, cfg, params, ecfg, runner=runner,
                                n_sources=2) for i in range(2)]
     res = serve_real_cluster(
-        reqs, engines, cluster_cfg=RealClusterConfig(window_tokens=300))
+        reqs, engines, cluster_cfg=RealClusterConfig(window_tokens=300,
+                                                     **cluster_kw))
     for e in engines:
         e.pool.check_invariants()
     return res, engines
@@ -71,7 +79,35 @@ def _report(reqs, engines, res):
           f"(virtual time)")
 
 
-def main(shared_prefix: bool = False):
+def _chaos(cfg, params, runner, ecfg):
+    """Crash engine 1 mid-run, recover it, prove nothing was lost."""
+    from repro.ft import FaultEvent, FaultPlan
+    from repro.ft.health import HealthConfig
+
+    mk = lambda: _requests(cfg, np.random.default_rng(0))
+    res0, _ = _serve(cfg, params, runner, ecfg, base := mk())
+    want = {r.req_id: r.output_tokens for r in base}
+
+    plan = FaultPlan(events=(FaultEvent("crash", 1, 10),
+                             FaultEvent("recover", 1, 22)))
+    res, engines = _serve(
+        cfg, params, runner, ecfg, reqs := mk(), fault_plan=plan,
+        health_cfg=HealthConfig(trace_timeout_s=0.3))
+
+    print("== chaos: engine 1 crashes at round 10, recovers at 22 ==")
+    _report(reqs, engines, res)
+    print(f"health events: {res.signals['health_events']}")
+    print(f"engine failures: {res.signals['n_failures']}  "
+          f"requests recovered: {res.signals['recovered_requests']}  "
+          f"recompute tokens: {res.signals['recovery_recompute_tokens']}")
+    exact = all(r.full_output_tokens == want[r.req_id] for r in reqs)
+    lost = [r.req_id for r in reqs
+            if r.state is not RequestState.FINISHED or r.error]
+    print(f"bit-exact vs fault-free: {exact}  lost/errored: {lost}")
+    assert exact and not lost
+
+
+def main(shared_prefix: bool = False, chaos: bool = False):
     import jax
     cfg = get_smoke_config("qwen3-moe-30b-a3b")
     params = build_model(cfg).init(jax.random.PRNGKey(0))
@@ -81,6 +117,9 @@ def main(shared_prefix: bool = False):
                              chunk_buckets=(8, 16))
     runner = PagedModelRunner(cfg, params, ecfg, n_sources=2)
 
+    if chaos:
+        _chaos(cfg, params, runner, ecfg)
+        return
     if not shared_prefix:
         reqs = _requests(cfg, np.random.default_rng(0))
         res, engines = _serve(cfg, params, runner, ecfg, reqs)
@@ -122,4 +161,8 @@ if __name__ == "__main__":
     ap.add_argument("--shared-prefix", action="store_true",
                     help="shared-system-prompt workload with the "
                          "prefix-sharing allocator, vs a no-sharing run")
-    main(shared_prefix=ap.parse_args().shared_prefix)
+    ap.add_argument("--chaos", action="store_true",
+                    help="crash engine 1 mid-run and recover it: fence, "
+                         "re-dispatch, rejoin — bit-exact vs fault-free")
+    _a = ap.parse_args()
+    main(shared_prefix=_a.shared_prefix, chaos=_a.chaos)

@@ -89,6 +89,11 @@ class GimbalScheduler:
     def _engines(self) -> List[int]:
         return [e for e in self.traces.engine_ids if e not in self._excluded]
 
+    def healthy_engines(self) -> List[int]:
+        """Engines currently eligible for dispatch (cluster-loop view for
+        admission hold/shed decisions)."""
+        return self._engines()
+
     # ---- compensation -------------------------------------------------
     def _compensation(self, engine_id: int, now: float) -> float:
         c = self._comp.get(engine_id, 0.0)
@@ -164,14 +169,22 @@ class GimbalScheduler:
         return engines[next(self._rr) % len(engines)]
 
     def select_engine(self, prefill_tokens: float, now: float = 0.0,
-                      prompt_tokens=None) -> int:
+                      prompt_tokens=None) -> Optional[int]:
         """Pick the engine for a request. ``prompt_tokens`` (optional)
         enables the prefix-affinity credit; omitting it — or zeroing
         ``affinity_weight`` — reproduces affinity-free dispatch decision
-        for decision, including round-robin state consumption."""
+        for decision, including round-robin state consumption.
+
+        Returns ``None`` when the fleet is empty or fully excluded
+        (every engine down/draining): the caller must hold the request
+        pending and retry — a defined outcome, never a crash and never a
+        dispatch onto a dead engine. No compensation is charged and no
+        round-robin state is consumed on a ``None`` return."""
         engines = self._engines()
         if not engines:
-            raise RuntimeError("no healthy engines")
+            self.decisions["no_engine"] = self.decisions.get(
+                "no_engine", 0) + 1
+            return None
         traces = {e: self.traces.get(e) for e in engines}
 
         # line 1-2: incomplete traces -> ordered dispatch
@@ -238,10 +251,26 @@ class BaselineScheduler:
         self.policy = policy
         self._rr = itertools.count()
         self._inflight: Dict[int, int] = {}
+        self._excluded: set = set()
+        self.decisions: Dict[str, int] = {}
+
+    # health/elastic exclusion — same contract as GimbalScheduler, so the
+    # EngineHealthMonitor and the cluster loop work against either
+    def exclude(self, engine_id: int) -> None:
+        self._excluded.add(engine_id)
+
+    def include(self, engine_id: int) -> None:
+        self._excluded.discard(engine_id)
+
+    def healthy_engines(self) -> List[int]:
+        return [e for e in self.traces.engine_ids
+                if e not in self._excluded]
 
     def select_engine(self, prefill_tokens: float, now: float = 0.0,
-                      prompt_tokens=None) -> int:
-        engines = self.traces.engine_ids
+                      prompt_tokens=None) -> Optional[int]:
+        engines = self.healthy_engines()
+        if not engines:
+            return None      # hold pending (same contract as Gimbal)
         if self.policy == "round_robin":
             return engines[next(self._rr) % len(engines)]
         # least_requests: request-count dispatch (coarse signal, the paper's

@@ -180,6 +180,36 @@ class TraceTable:
     def snapshot(self) -> Dict[int, EngineTrace]:
         return {e: t.copy() for e, t in self._traces.items() if t is not None}
 
+    def scalar_snapshot(self) -> Dict[int, Dict[str, float]]:
+        """JSON-serializable scalar view of the latest traces (prefix
+        summaries omitted — the resync path rebuilds those from the live
+        engines). Feeds serving-state checkpoints, so a restarted control
+        plane resumes with pressure signals instead of fallback dispatch."""
+        out: Dict[int, Dict[str, float]] = {}
+        for e, t in self._traces.items():
+            if t is None:
+                continue
+            out[int(e)] = {
+                "remaining_prefill_tokens": float(t.remaining_prefill_tokens),
+                "waiting_prefill_tokens": float(t.waiting_prefill_tokens),
+                "kv_usage": float(t.kv_usage),
+                "moe_pressure": float(t.moe_pressure),
+                "n_running": int(t.n_running),
+                "n_waiting": int(t.n_waiting),
+                "n_stalled": int(t.n_stalled),
+                "timestamp": float(t.timestamp),
+            }
+        return out
+
+    def restore_scalars(self, snap: Dict) -> None:
+        """Seed the table from :meth:`scalar_snapshot` output (restored
+        engines owe a full prefix-summary resync on their next trace)."""
+        for e, s in snap.items():
+            e, s = int(e), dict(s)
+            ts = float(s.pop("timestamp", 0.0))
+            self._traces[e] = EngineTrace(engine_id=e, timestamp=ts, **s)
+            self._resync.add(e)
+
     def add_engine(self, engine_id: int) -> None:
         """Elastic scale-up: new engine starts with no trace (ordered dispatch
         covers it until its first report)."""

@@ -1,9 +1,12 @@
 from repro.ft.checkpoint import (checkpoint_step, restore_checkpoint,
+                                 restore_serving_extra,
                                  restore_serving_state, save_checkpoint,
                                  save_serving_state)
 from repro.ft.elastic import ElasticController
+from repro.ft.faults import FaultEvent, FaultInjector, FaultPlan
 from repro.ft.health import EngineHealthMonitor, HealthConfig
 
-__all__ = ["checkpoint_step", "restore_checkpoint", "restore_serving_state",
-           "save_checkpoint", "save_serving_state", "ElasticController",
-           "EngineHealthMonitor", "HealthConfig"]
+__all__ = ["checkpoint_step", "restore_checkpoint", "restore_serving_extra",
+           "restore_serving_state", "save_checkpoint", "save_serving_state",
+           "ElasticController", "EngineHealthMonitor", "HealthConfig",
+           "FaultEvent", "FaultInjector", "FaultPlan"]

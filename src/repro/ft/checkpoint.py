@@ -129,14 +129,30 @@ def checkpoint_step(path: str) -> Optional[int]:
 def save_serving_state(path: str, *, placement_assign: np.ndarray,
                        profiler_B: np.ndarray, profiler_A: np.ndarray,
                        scheduler_comp: Dict[int, float],
+                       traces: Optional[Dict] = None,
                        step: int = 0) -> str:
+    """Snapshot the serving control plane: expert placement, profiler
+    window, scheduler compensation and (optionally) the latest trace
+    scalars (``TraceTable.scalar_snapshot``) — everything a restarted
+    coordinator needs to resume with learned state instead of cold block
+    layout and fallback dispatch."""
     tree = {
         "placement_assign": placement_assign,
         "profiler_B": profiler_B,
         "profiler_A": profiler_A,
     }
-    return save_checkpoint(path, tree, step=step, extra={
-        "scheduler_comp": {str(k): v for k, v in scheduler_comp.items()}})
+    extra: Dict[str, Any] = {
+        "scheduler_comp": {str(k): v for k, v in scheduler_comp.items()}}
+    if traces is not None:
+        extra["traces"] = {str(k): v for k, v in traces.items()}
+    return save_checkpoint(path, tree, step=step, extra=extra)
+
+
+def restore_serving_extra(path: str) -> Dict:
+    """The full ``extra`` manifest dict of a serving-state checkpoint
+    (scheduler compensation, trace scalars, ...) without loading leaves."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f)["extra"]
 
 
 def restore_serving_state(path: str):

@@ -30,9 +30,15 @@ def main():
                     help="with --real --paged: shared-system-prompt "
                          "workload on the prefix-sharing allocator "
                          "(ref-counted pages + COW), vs a no-sharing run")
+    ap.add_argument("--chaos", action="store_true",
+                    help="with --real --paged: crash an engine mid-run "
+                         "and recover it — fence, re-dispatch, rejoin, "
+                         "bit-exact outputs vs the fault-free pass")
     args = ap.parse_args()
     if args.shared_prefix and not (args.real and args.paged):
         ap.error("--shared-prefix requires --real --paged")
+    if args.chaos and not (args.real and args.paged):
+        ap.error("--chaos requires --real --paged")
 
     if args.real:
         import os
@@ -42,7 +48,7 @@ def main():
         sys.path.insert(0, root)   # examples/ lives at the repo root
         if args.paged:
             from examples.serve_moe_paged import main as real_main
-            real_main(shared_prefix=args.shared_prefix)
+            real_main(shared_prefix=args.shared_prefix, chaos=args.chaos)
         else:
             from examples.serve_moe import main as real_main
             real_main()

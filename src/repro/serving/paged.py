@@ -42,6 +42,11 @@ class PagedBlockAllocator(BlockPool):
         # LIFO free-list of physical ids; id 0 is the reserved garbage page
         self._free_ids: List[int] = list(range(n_pages, 0, -1))
         self.tables: Dict[int, List[int]] = {}
+        # fault injection (ft/faults.py alloc_fail bursts): while set, every
+        # allocation that would take NEW pages fails — a device memory
+        # fault, not capacity pressure. Growth that is already backed still
+        # succeeds, so the failure mode is honest about what broke.
+        self.force_alloc_fail = False
 
     # ---- allocation -----------------------------------------------------
     def allocate(self, req_id: int, tokens: int) -> bool:
@@ -54,7 +59,7 @@ class PagedBlockAllocator(BlockPool):
         need = self.blocks_for(tokens, self.block_size) - held
         if need <= 0:
             return True
-        if need > len(self._free_ids):
+        if self.force_alloc_fail or need > len(self._free_ids):
             return False
         pre_free = len(self._free_ids)
         pages = [self._free_ids.pop() for _ in range(need)]
@@ -253,6 +258,8 @@ class SharedPagedAllocator(PagedBlockAllocator):
         need = self.blocks_for(tokens, self.block_size) - held
         if need <= 0:
             return True
+        if self.force_alloc_fail:         # injected device fault burst
+            return False
         if need > self.free_blocks:       # free list + reclaimable cache
             return False
         pages = []

@@ -200,6 +200,12 @@ class PagedRealEngine:
         self.step_count = 0
         self.n_stalled_total = 0
         self._stalled_last = 0
+        # fault-tolerance lifecycle (ft/): dead = crashed/fenced/released
+        # (no stepping, no traces); draining = no admissions, residents
+        # finish, then release() leaves the fleet
+        self.dead = False
+        self.draining = False
+        self.n_failures = 0
         # per-step telemetry (mirrors DPEngine for the harness/bench)
         self.total_prefill_tokens = 0
         self.total_decode_tokens = 0
@@ -226,6 +232,75 @@ class PagedRealEngine:
             return
         req.state = RequestState.WAITING
         self.waiting.append(req)
+
+    # ---- fault-tolerance lifecycle ---------------------------------------
+    def _reset_pool(self) -> None:
+        """Replace the allocator with a fresh, empty one (the physical
+        arrays keep their storage — stale contents are unreachable once
+        every block table is gone). Lifetime stat counters carry over so
+        cluster telemetry stays cumulative across restarts."""
+        old = self.pool
+        self.pool = (SharedPagedAllocator(self.ecfg.n_pages,
+                                          self.ecfg.page_size)
+                     if self.sharing else
+                     PagedBlockAllocator(self.ecfg.n_pages,
+                                         self.ecfg.page_size))
+        for k, v in vars(old).items():
+            if k.startswith("stat_"):
+                setattr(self.pool, k, v)
+        self.planner.pool = self.pool
+        if self.sharing:
+            self._summary_shipper = PrefixSummaryShipper(self.pool)
+
+    def fail(self, now: float = 0.0) -> List[Request]:
+        """Crash (or fence a presumed-dead engine): the KV pool is lost.
+
+        Every resident and queued request is exported for re-dispatch —
+        already-emitted tokens folded into a resume prompt
+        (:meth:`Request.export_for_resume`), so a healthy engine
+        re-prefills prompt+emitted and continues the token stream exactly
+        under deterministic decode. Idempotent: a second call on a dead
+        engine only drains requests enqueued since (a dispatch that raced
+        the failure detection), without resetting the pool again."""
+        exported = list(self.running) + list(self.waiting)
+        self.running.clear()
+        self.waiting.clear()
+        for r in exported:
+            r.export_for_resume()
+        if not self.dead:
+            self.n_failures += 1
+            self._reset_pool()
+            self.dead = True
+        self.draining = False
+        return exported
+
+    def drain(self, now: float = 0.0) -> List[Request]:
+        """Graceful scale-in, phase 1: stop admitting. The local queue is
+        exported for re-dispatch (those requests hold no KV yet); residents
+        keep running to completion. The caller watches ``has_work`` and
+        calls :meth:`release` once the last resident finishes."""
+        self.draining = True
+        exported = list(self.waiting)
+        self.waiting.clear()
+        for r in exported:
+            r.export_for_resume()
+        return exported
+
+    def release(self) -> None:
+        """Graceful scale-in, phase 2: residents are done — free the pool
+        and leave the fleet (dead until a restart/scale-up re-adds it)."""
+        assert not self.running and not self.waiting, \
+            "release() before the drain finished"
+        self._reset_pool()
+        self.dead = True
+        self.draining = False
+
+    def restart(self) -> None:
+        """Rejoin after fail()/release(): fresh empty pool (reset at death),
+        no residents. The control plane re-admits on the first fresh trace
+        and the prefix-summary resync path rebuilds the affinity signal."""
+        self.dead = False
+        self.draining = False
 
     def _preempt_one(self, protect: Optional[Request] = None) -> bool:
         """Evict the latest-arrived request (recompute mode): reclaim its
@@ -281,6 +356,8 @@ class PagedRealEngine:
         control decisions (admission, growth/COW, preemption, token-budget
         packing into fused lane groups); this method only executes the
         declarative plan on the data plane."""
+        if self.dead:
+            return []
         if self.sharing and self.ecfg.register_ttl_s > 0:
             self.pool.expire_registrations(now)
         plan = self.planner.plan(now)
@@ -344,7 +421,8 @@ class PagedRealEngine:
                 tok = int(jnp.argmax(logits[i]))
                 r.output_tokens = [tok]
                 r.generated = 1
-                r.first_token_time = now
+                if r.first_token_time < 0:   # a resumed request's client
+                    r.first_token_time = now  # saw its first token pre-crash
                 if r.done:
                     self._finish(r, now)
                     finished.append(r)

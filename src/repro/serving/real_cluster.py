@@ -10,6 +10,19 @@ allocator state behind every trace signal.
 Time is virtual (``dt`` per cluster round) so runs are deterministic and
 wall-clock independent; each round steps every engine once — the real
 analogue of the simulator's event loop at a fixed step cadence.
+
+Fault tolerance (ft/): the loop survives engine crash, drain, stragglers
+and trace loss. An :class:`~repro.ft.health.EngineHealthMonitor` watches
+trace staleness; a silent engine is excluded and *fenced* (presumed dead
+IS dead — its resident work is exported rather than left to race a
+re-dispatch), and the exported requests re-dispatch to healthy engines
+through Algorithm 1 with their already-emitted tokens folded into resume
+prompts, so continuations are token-exact under deterministic decode.
+Re-dispatch retries back off (capped) and quarantine poison requests; when
+no engine can take work, admissions are *shed* with an explicit per-request
+error instead of livelocking to ``max_rounds``. A declarative
+:class:`~repro.ft.faults.FaultPlan` makes any chaos schedule a
+reproducible test case.
 """
 from __future__ import annotations
 
@@ -23,6 +36,9 @@ from repro.core.placement import PlacementConfig
 from repro.core.scheduler import (BaselineScheduler, GimbalScheduler,
                                   SchedulerConfig)
 from repro.core.traces import TraceTable
+from repro.ft.elastic import ElasticController
+from repro.ft.faults import FaultInjector, FaultPlan
+from repro.ft.health import EngineHealthMonitor, HealthConfig
 from repro.serving.request import Request, RequestState
 from repro.serving.simulator import SimResult
 
@@ -41,6 +57,70 @@ class RealClusterConfig:
     # rarely migrate; pass e.g. PlacementConfig.uncalibrated() to force
     # rebalancing at small scale (tests/demos)
     placement_cfg: Optional[PlacementConfig] = None
+    # ---- fault tolerance -------------------------------------------------
+    health_cfg: Optional[HealthConfig] = None   # None -> HealthConfig()
+    fault_plan: Optional[FaultPlan] = None      # deterministic chaos schedule
+    # re-dispatch of requests exported off failed/drained engines: each
+    # failed attempt (no healthy engine) doubles the retry backoff up to
+    # the cap; past max_retries the request is quarantined with an explicit
+    # error instead of spinning the loop
+    redispatch_max_retries: int = 4
+    redispatch_backoff_rounds: int = 2
+    redispatch_backoff_cap_rounds: int = 16
+    max_recoveries: int = 5           # poison guard: exports past this
+                                      # quarantine instead of re-dispatching
+    # graceful degradation: when EVERY healthy engine reports kv_usage at
+    # or above shed_kv, admissions hold (backpressure); a request held past
+    # shed_patience_s virtual seconds after arrival is shed with an error
+    shed_kv: float = 0.97
+    shed_patience_s: float = 10.0
+    # livelock watchdog (opt-in): after this many consecutive rounds with
+    # zero global progress (no tokens, no finishes, no dispatches), error
+    # out every unfinished request instead of spinning to max_rounds
+    stall_abort_rounds: int = 0
+    # ---- control-plane checkpoints (ft/checkpoint.py) --------------------
+    snapshot_every_rounds: int = 0    # 0 = off
+    snapshot_path: Optional[str] = None
+    restore_from: Optional[str] = None
+
+
+def _save_cluster_state(path: str, sched, coord, table: TraceTable,
+                        rounds: int) -> None:
+    from repro.ft.checkpoint import save_serving_state
+    if coord is not None:
+        assign = coord.placement.assign
+        B, A = coord.profiler.snapshot(reset=False)
+    else:
+        assign = np.zeros((1, 1), np.int64)
+        B, A = np.zeros((1, 1), np.int64), np.zeros((1, 1, 1), np.int64)
+    save_serving_state(path, placement_assign=assign, profiler_B=B,
+                       profiler_A=A,
+                       scheduler_comp=dict(getattr(sched, "_comp", {})),
+                       traces=table.scalar_snapshot(), step=rounds)
+
+
+def _restore_cluster_state(path: str, sched, coord,
+                           table: TraceTable) -> None:
+    from repro.ft.checkpoint import (restore_serving_extra,
+                                     restore_serving_state)
+    tree, comp = restore_serving_state(path)
+    if hasattr(sched, "_comp"):
+        sched._comp.update(comp)
+    if coord is not None:
+        assign = np.asarray(tree["placement_assign"])
+        if assign.shape == coord.placement.assign.shape:
+            coord.placement.assign[:] = assign
+        B = np.asarray(tree["profiler_B"])
+        A = np.asarray(tree["profiler_A"])
+        if B.shape == coord.profiler._B.shape:
+            coord.profiler._B[:] = B
+        if A.shape == coord.profiler._A.shape:
+            coord.profiler._A[:] = A
+    snap = restore_serving_extra(path).get("traces")
+    if snap:
+        # only engines present in THIS fleet (elastic restart may differ)
+        table.restore_scalars({e: s for e, s in snap.items()
+                               if int(e) in table.engine_ids})
 
 
 def serve_real_cluster(requests: List[Request], engines, *,
@@ -55,6 +135,7 @@ def serve_real_cluster(requests: List[Request], engines, *,
     cc = cluster_cfg or RealClusterConfig()
     mcfg = engines[0].cfg
     n_engines = len(engines)
+    by_id = {e.engine_id: e for e in engines}
     table = TraceTable([e.engine_id for e in engines])
     if cc.dp_scheduler == "gimbal":
         sched = GimbalScheduler(table, cc.scheduler_cfg)
@@ -69,11 +150,49 @@ def serve_real_cluster(requests: List[Request], engines, *,
             cfg=CoordinatorConfig(window_tokens=cc.window_tokens,
                                   feedback=cc.feedback),
             placement_cfg=cc.placement_cfg)
+    if cc.restore_from:
+        _restore_cluster_state(cc.restore_from, sched, coord, table)
 
     pending = sorted(requests, key=lambda r: (r.arrival_time, r.req_id))
     now, rounds, migrations = 0.0, 0, 0
     kv_peak = 0.0
     cur_perms = np.asarray(engines[0].placement)
+
+    # ---- fault-tolerance state -------------------------------------------
+    injector = FaultInjector(cc.fault_plan) if cc.fault_plan else None
+    orphans: List[Request] = []         # exported, awaiting re-dispatch
+    retry_at: Dict[int, int] = {}       # req_id -> earliest re-dispatch round
+    crash_exports: Dict[int, List[Request]] = {}   # limbo until detection
+    recovered = 0                       # requests successfully re-dispatched
+    recovery_recompute_tokens = 0       # re-prefilled prompt+emitted tokens
+    shed = 0
+    quarantined = 0
+    drained_engines: List[int] = []
+    stall_streak = 0
+
+    def quarantine(r: Request, reason: str) -> None:
+        nonlocal quarantined
+        r.error = reason
+        r.state = RequestState.FINISHED
+        r.finish_time = now
+        quarantined += 1
+
+    def on_engine_down(eid: int) -> int:
+        """Health-monitor callback: collect the dead engine's exported
+        requests — and FENCE an engine that is merely unreachable (its
+        silent residents would otherwise race their own re-dispatch)."""
+        moved = crash_exports.pop(eid, [])
+        e = by_id[eid]
+        if hasattr(e, "fail"):
+            moved = moved + e.fail(now)   # idempotent: drains limbo enqueues
+        orphans.extend(moved)
+        return len(moved)
+
+    mon = EngineHealthMonitor(table, sched, cc.health_cfg or HealthConfig(),
+                              redispatch=on_engine_down)
+    # placement shape is kept fixed across membership changes (rank set
+    # stays physical); the controller wires table/scheduler membership only
+    ec = ElasticController(table, sched, coordinator=None)
 
     def apply_placement(new_perms: np.ndarray) -> None:
         """Adopting a placement means MOVING the weights: permute every
@@ -90,25 +209,138 @@ def serve_real_cluster(requests: List[Request], engines, *,
                     holder.params, mcfg, cur_perms, new_perms)
             e.placement = new_perms
         cur_perms = new_perms
-    while (pending or any(e.has_work for e in engines)) \
-            and rounds < cc.max_rounds:
-        # dispatch arrivals due by now (Algorithm 1 against live traces;
-        # prompt ids let the scheduler score prefix affinity against the
-        # engines' radix-cache summaries)
+
+    def report_trace(e) -> None:
+        # delta-based prefix digests: ship a full summary only when the
+        # table lost the chain (first report, engine restart, scheduler
+        # include()) — steady-state traces carry deltas
+        table.report(e.trace(now, full_prefix_summary=table.needs_resync(
+            e.engine_id)), now=now)
+        if hasattr(sched, "on_trace_refresh"):
+            sched.on_trace_refresh(e.engine_id)
+
+    def progress_marker():
+        return (len(pending), len(orphans),
+                sum(len(v) for v in crash_exports.values()),
+                sum(e.total_prefill_tokens + e.total_decode_tokens
+                    for e in engines),
+                sum(len(e.finished) for e in engines
+                    if hasattr(e, "finished")))
+
+    # engines announce themselves before the first round: staleness
+    # detection needs a birth timestamp (a crash before the first report
+    # must still be detectable) and Algorithm 1 starts from real — empty —
+    # state instead of the incomplete-trace fallback
+    for e in engines:
+        report_trace(e)
+
+    def is_dead(e) -> bool:
+        return getattr(e, "dead", False)
+
+    while (pending or orphans or crash_exports
+           or any(e.has_work for e in engines)) and rounds < cc.max_rounds:
+        # ---- 1. scheduled faults (deterministic chaos) -------------------
+        if injector is not None:
+            for eid in injector.crashes(rounds):
+                e = by_id[eid]
+                if not is_dead(e):
+                    crash_exports.setdefault(eid, []).extend(e.fail(now))
+            for eid in injector.recoveries(rounds):
+                e = by_id[eid]
+                if is_dead(e):
+                    e.restart()
+                    # exports never detected (quick recovery) re-dispatch
+                    # now — the restarted engine lost its pool regardless
+                    orphans.extend(crash_exports.pop(eid, []))
+                    if eid not in table.engine_ids:   # drained: rejoin
+                        ec.scale_up(eid, now)
+            for eid in injector.drains(rounds):
+                e = by_id[eid]
+                if not is_dead(e) and not getattr(e, "draining", False):
+                    sched.exclude(eid)
+                    orphans.extend(e.drain(now))
+            for e in engines:
+                if hasattr(e, "pool"):
+                    e.pool.force_alloc_fail = injector.alloc_fail(
+                        e.engine_id, rounds)
+
+        # drain completion: residents finished -> release pool, leave fleet
+        for e in engines:
+            if getattr(e, "draining", False) and not e.has_work:
+                e.release()
+                drained_engines.append(e.engine_id)
+                if e.engine_id in table.engine_ids:
+                    ec.scale_down(e.engine_id, now, drain=lambda _: 0)
+                mon.unhealthy.discard(e.engine_id)
+
+        # ---- 2. dispatch arrivals due by now (Algorithm 1 against live
+        # traces; prompt ids let the scheduler score prefix affinity
+        # against the engines' radix-cache summaries). Under cluster-wide
+        # hard KV pressure or an empty fleet, admissions HOLD (FIFO) and
+        # eventually shed with an explicit error — never a crash, never a
+        # dispatch onto a dead engine, never a silent livelock.
         while pending and pending[0].arrival_time <= now:
-            r = pending.pop(0)
+            r = pending[0]
+            healthy = sched.healthy_engines()
+            traces = [table.get(e) for e in healthy]
+            pressured = bool(traces) and all(
+                t is not None and t.kv_usage >= cc.shed_kv for t in traces)
+            if not healthy or pressured:
+                if now - r.arrival_time >= cc.shed_patience_s:
+                    pending.pop(0)
+                    quarantine(r, "shed_no_healthy_engine" if not healthy
+                               else "shed_kv_pressure")
+                    shed += 1
+                    continue
+                break          # hold: retry next round (FIFO, no bypass)
             eid = sched.select_engine(r.prompt_len, now,
                                       prompt_tokens=r.prompt_tokens)
-            engines[eid].enqueue(r, now)
+            if eid is None:    # raced an exclusion inside this round
+                break
+            pending.pop(0)
+            by_id[eid].enqueue(r, now)
+
+        # ---- 3. re-dispatch recovered requests (capped backoff) ----------
+        if orphans:
+            still: List[Request] = []
+            for r in orphans:
+                if r.n_recoveries > cc.max_recoveries:
+                    quarantine(r, "poison_request")   # kills every host
+                    continue
+                if retry_at.get(r.req_id, 0) > rounds:
+                    still.append(r)
+                    continue
+                eid = sched.select_engine(r.prompt_len, now,
+                                          prompt_tokens=r.prompt_tokens)
+                if eid is None:
+                    r.redispatch_attempts += 1
+                    if r.redispatch_attempts > cc.redispatch_max_retries:
+                        quarantine(r, "redispatch_exhausted")
+                        continue
+                    backoff = min(
+                        cc.redispatch_backoff_rounds
+                        * 2 ** (r.redispatch_attempts - 1),
+                        cc.redispatch_backoff_cap_rounds)
+                    retry_at[r.req_id] = rounds + backoff
+                    still.append(r)
+                    continue
+                by_id[eid].enqueue(r, now)
+                if not r.error:            # target may reject at enqueue
+                    recovered += 1
+                    recovery_recompute_tokens += r.prompt_len
+            orphans = still
+
+        # ---- 4. step the data planes + collect traces --------------------
         for e in engines:
-            e.step(now)
-            # delta-based prefix digests: ship a full summary only when
-            # the table lost the chain (first report, engine restart,
-            # scheduler include()) — steady-state traces carry deltas
-            table.report(e.trace(now, full_prefix_summary=table.needs_resync(
-                e.engine_id)), now=now)
-            if hasattr(sched, "on_trace_refresh"):
-                sched.on_trace_refresh(e.engine_id)
+            if is_dead(e):
+                continue       # no steps, no traces: staleness will tell
+            straggling = injector is not None and injector.skip_step(
+                e.engine_id, rounds)
+            if not straggling:
+                e.step(now)
+            if not (injector is not None
+                    and injector.drop_trace(e.engine_id, rounds)):
+                report_trace(e)
             kv_peak = max(kv_peak, e.pool.usage) \
                 if hasattr(e, "pool") else kv_peak
             if coord is not None:
@@ -118,6 +350,10 @@ def serve_real_cluster(requests: List[Request], engines, *,
                         B, A, n_tokens=int(B.sum())
                         // max(mcfg.n_moe_layers, 1)
                         // max(mcfg.moe.top_k, 1))
+
+        # ---- 5. health: exclude+fence stale engines, rejoin fresh ones ---
+        mon.check(now)
+
         if coord is not None:
             migrated, _dur = coord.maybe_rebalance(now)
             if migrated:
@@ -128,23 +364,72 @@ def serve_real_cluster(requests: List[Request], engines, *,
             if coord._last_rank_load.sum() > 0:
                 for e in engines:
                     e.moe_pressure = coord.engine_moe_pressure(e.engine_id)
+
+        # ---- 6. livelock watchdog (opt-in) -------------------------------
+        if cc.stall_abort_rounds > 0:
+            marker = progress_marker()
+            if rounds > 0 and marker == last_marker:
+                stall_streak += 1
+                if stall_streak >= cc.stall_abort_rounds:
+                    for e in engines:
+                        if hasattr(e, "fail") and e.has_work:
+                            orphans.extend(e.fail(now))
+                    for r in (orphans + pending
+                              + [q for v in crash_exports.values()
+                                 for q in v]):
+                        quarantine(r, "cluster_livelock")
+                    orphans, pending = [], []
+                    crash_exports.clear()
+                    break
+            else:
+                stall_streak = 0
+            last_marker = marker
+        elif rounds == 0:
+            last_marker = progress_marker()
+
+        # ---- 7. periodic control-plane snapshot --------------------------
+        if cc.snapshot_every_rounds > 0 and cc.snapshot_path \
+                and rounds > 0 and rounds % cc.snapshot_every_rounds == 0:
+            _save_cluster_state(cc.snapshot_path, sched, coord, table,
+                                rounds)
+
         now += cc.dt
         rounds += 1
 
-    # rejected requests (error set at enqueue) must not pollute the latency
-    # metrics: their first_token_time is -1, which would read as a negative
-    # TTFT. They stay visible via signals["rejected"].
+    # rejected/shed/quarantined requests (error set) must not pollute the
+    # latency metrics: their first_token_time may be -1, which would read
+    # as a negative TTFT. They stay visible via signals["errors"]/counts.
     res = SimResult(name=f"real_cluster_{cc.dp_scheduler}",
                     requests=[r for r in requests if not r.error],
                     duration_s=now)
+    errors = {r.req_id: r.error for r in requests if r.error}
     res.signals = {
         "rounds": rounds,
         "migrations": migrations,
         "expert_moves": coord.placement.n_migrations if coord else 0,
         "preemptions": sum(r.n_preemptions for r in requests),
         "stalled": sum(getattr(e, "n_stalled_total", 0) for e in engines),
-        "rejected": sum(1 for r in requests if r.error),
         "kv_peak": kv_peak,
+        # ---- fault-tolerance telemetry. Per-request errors are surfaced
+        # verbatim so degraded runs are truthful: enqueue rejections, shed
+        # admissions and quarantined recoveries are all visible, and
+        # "unfinished" counts anything the loop abandoned at max_rounds.
+        "errors": errors,
+        "rejected": sum(1 for r in requests
+                        if r.error and not r.error.startswith("shed_")
+                        and r.error not in ("poison_request",
+                                            "redispatch_exhausted",
+                                            "cluster_livelock")),
+        "shed_requests": shed,
+        "quarantined": quarantined,
+        "unfinished": sum(1 for r in requests
+                          if r.state is not RequestState.FINISHED),
+        "n_failures": sum(getattr(e, "n_failures", 0) for e in engines),
+        "recovered_requests": recovered,
+        "recovery_recompute_tokens": recovery_recompute_tokens,
+        "drained_engines": drained_engines,
+        "health_events": list(mon.events),
+        "elastic_events": list(ec.log),
         # prefix-sharing telemetry (0 when sharing is off). Deliberately
         # direct attribute access: every engine type declares
         # ``prefix_hit_tokens`` (and every pool the stat_* counters), so a

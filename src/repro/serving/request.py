@@ -31,8 +31,46 @@ class Request:
     first_token_time: float = -1.0
     finish_time: float = -1.0
     n_preemptions: int = 0
-    error: Optional[str] = None    # set when FINISHED is a rejection, e.g.
-                                   # a prompt exceeding the engine's KV capacity
+    error: Optional[str] = None    # set when FINISHED is a rejection, a shed
+                                   # admission, or a quarantined recovery —
+                                   # e.g. a prompt exceeding KV capacity
+
+    # ---- crash recovery (real plane) ----------------------------------
+    # Tokens already emitted before the serving engine failed, folded into
+    # the prompt by export_for_resume(): a healthy engine then re-prefills
+    # prompt+emitted and the next sampled token continues the stream
+    # token-exactly under deterministic decode (prefill/decode logit
+    # parity). The folded tokens leave max_new_tokens, so engine-local
+    # bookkeeping (generated, written KV, done) needs no special cases.
+    resume_output: Optional[List[int]] = None
+    orig_prompt_len: int = -1      # prompt_len before any resume folding
+    n_recoveries: int = 0          # times exported off a failed engine
+    redispatch_attempts: int = 0   # failed re-dispatch tries (backoff books)
+
+    def export_for_resume(self) -> None:
+        """Prepare this request to leave a failed/draining engine: fold the
+        already-emitted tokens into the prompt and reset to a fresh WAITING
+        request a healthy engine can serve from scratch."""
+        if self.orig_prompt_len < 0:
+            self.orig_prompt_len = self.prompt_len
+        emitted = list(self.output_tokens or [])
+        if emitted:
+            self.resume_output = (self.resume_output or []) + emitted
+            self.prompt_tokens = list(self.prompt_tokens) + emitted
+            self.prompt_len += len(emitted)
+            self.max_new_tokens -= len(emitted)
+        self.output_tokens = None
+        self.prefill_done = 0
+        self.generated = 0
+        self.state = RequestState.WAITING
+        self.engine_id = -1
+        self.n_recoveries += 1
+
+    @property
+    def full_output_tokens(self) -> List[int]:
+        """The client-visible output stream: tokens emitted before any
+        engine failure plus those emitted after re-dispatch."""
+        return list(self.resume_output or []) + list(self.output_tokens or [])
 
     # ---- trace-signal helpers -----------------------------------------
     @property

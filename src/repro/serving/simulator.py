@@ -286,6 +286,9 @@ def simulate(requests: List[Request], system: SystemConfig, *,
             else:
                 eid = sched.select_engine(r.prompt_len, now,
                                           prompt_tokens=r.prompt_tokens)
+                # the simulator never excludes engines, so a None (empty
+                # fleet) return cannot happen on a well-formed SystemConfig
+                assert eid is not None, "simulator fleet is empty"
             engines[eid].enqueue(r, now)
             kick(eid, now)
         elif kind == "trace":

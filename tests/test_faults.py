@@ -1,0 +1,317 @@
+"""Fault injection + crash recovery.
+
+Unit layer: FaultPlan determinism and injector semantics, resume-prompt
+folding, empty-fleet scheduling, engine fail/drain lifecycle.
+
+Cluster layer: a deterministic crash→fence→re-dispatch→rejoin run in the
+fast lane, and the seeded chaos property harness (slow) — for ANY random
+FaultPlan, no request is lost or duplicated, every non-quarantined request
+finishes, and outputs are bit-exact vs the fault-free run.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import GimbalScheduler, TraceTable
+from repro.core.scheduler import BaselineScheduler
+from repro.ft import FaultEvent, FaultInjector, FaultPlan
+from repro.serving import (PagedRealEngine, RealClusterConfig, Request,
+                           RequestState, serve_real_cluster)
+from repro.ft.health import HealthConfig
+
+
+# ------------------------------------------------------------- plan/injector
+def test_fault_plan_random_deterministic():
+    a = FaultPlan.random(11, 3)
+    b = FaultPlan.random(11, 3)
+    assert a == b and a.seed == 11
+    assert a != FaultPlan.random(12, 3)
+    rounds = [ev.round for ev in a.events]
+    assert rounds == sorted(rounds)
+
+
+def test_fault_plan_anchor_engine_protected():
+    """Engine 0 is never crashed/drained and its trace drops stay below the
+    detection window, so re-dispatch always has a live target."""
+    for seed in range(40):
+        plan = FaultPlan.random(seed, 3, detect_rounds=8)
+        for ev in plan.events:
+            if ev.engine_id == 0:
+                assert ev.kind not in ("crash", "drain")
+                if ev.kind == "trace_drop":
+                    assert ev.duration < 8
+
+
+def test_fault_event_validation():
+    with pytest.raises(AssertionError):
+        FaultEvent("meteor", 0, 1)
+    with pytest.raises(AssertionError):
+        FaultEvent("crash", 0, -1)
+    with pytest.raises(AssertionError):
+        FaultEvent("slow", 0, 1, period=0)
+
+
+def test_injector_point_and_window_semantics():
+    inj = FaultInjector(FaultPlan(events=(
+        FaultEvent("crash", 1, 5),
+        FaultEvent("recover", 1, 9),
+        FaultEvent("drain", 2, 5),
+        FaultEvent("trace_drop", 0, 3, duration=2),
+        FaultEvent("slow", 1, 10, duration=6, period=3),
+        FaultEvent("alloc_fail", 2, 8, duration=0),
+    )))
+    assert inj.crashes(5) == [1] and inj.crashes(6) == []
+    assert inj.recoveries(9) == [1]
+    assert inj.drains(5) == [2]
+    # windows are inclusive of both ends
+    assert [inj.drop_trace(0, r) for r in range(2, 7)] \
+        == [False, True, True, True, False]
+    assert inj.alloc_fail(2, 8) and not inj.alloc_fail(2, 9)
+    # slow: steps only on the period grid, phase-locked to window start
+    stepped = [not inj.skip_step(1, r) for r in range(10, 17)]
+    assert stepped == [True, False, False, True, False, False, True]
+    assert not inj.skip_step(1, 9) and not inj.skip_step(1, 17)
+
+
+# ------------------------------------------------------------ resume folding
+def test_export_for_resume_folds_emitted_tokens():
+    r = Request(req_id=0, prompt_len=4, max_new_tokens=6, arrival_time=0.0,
+                prompt_tokens=[1, 2, 3, 4])
+    r.output_tokens = [7, 8]
+    r.generated = 2
+    r.prefill_done = 4
+    r.state = RequestState.RUNNING
+    r.export_for_resume()
+    assert r.prompt_tokens == [1, 2, 3, 4, 7, 8] and r.prompt_len == 6
+    assert r.max_new_tokens == 4 and r.orig_prompt_len == 4
+    assert r.resume_output == [7, 8] and r.output_tokens is None
+    assert r.state is RequestState.WAITING and r.prefill_done == 0
+    assert r.n_recoveries == 1
+    # second export (crash on the new host) accumulates
+    r.output_tokens = [9]
+    r.export_for_resume()
+    assert r.prompt_tokens == [1, 2, 3, 4, 7, 8, 9]
+    assert r.max_new_tokens == 3 and r.resume_output == [7, 8, 9]
+    assert r.n_recoveries == 2 and r.orig_prompt_len == 4
+    r.output_tokens = [5, 6, 4]
+    assert r.full_output_tokens == [7, 8, 9, 5, 6, 4]
+
+
+# ------------------------------------------------------------- empty fleet
+def test_select_engine_empty_fleet_returns_none():
+    table = TraceTable([0, 1])
+    sched = GimbalScheduler(table)
+    sched.exclude(0)
+    sched.exclude(1)
+    assert sched.select_engine(10, 0.0) is None
+    assert sched.decisions["no_engine"] == 1
+    sched.include(1)
+    assert sched.select_engine(10, 0.0) == 1
+
+    for policy in ("round_robin", "least_requests"):
+        b = BaselineScheduler(TraceTable([]), policy)
+        assert b.select_engine(10, 0.0) is None
+
+
+# ----------------------------------------------------- engine FT lifecycle
+def _mk_reqs(cfg, n, plen, max_new, seed=3, spacing=0.0):
+    rng = np.random.default_rng(seed)
+    return [Request(req_id=i, prompt_len=plen, max_new_tokens=max_new,
+                    arrival_time=spacing * i,
+                    prompt_tokens=rng.integers(
+                        0, cfg.vocab_size, plen).tolist())
+            for i in range(n)]
+
+
+def _drive(engine, now=0.0, max_steps=400):
+    for _ in range(max_steps):
+        engine.step(now)
+        now += 0.01
+        if not engine.has_work:
+            return now
+    raise AssertionError("engine did not drain")
+
+
+def test_engine_fail_restart_token_exact(tiny_model, shared_runner):
+    """Crash mid-decode, restart, re-enqueue the exports on the SAME
+    engine: the resume prompt (prompt + emitted) re-prefills and the
+    continued stream is bit-exact vs an uninterrupted run."""
+    cfg, params = tiny_model
+    e = PagedRealEngine(0, cfg, params, shared_runner.ecfg,
+                        runner=shared_runner, n_sources=2)
+    base = _mk_reqs(cfg, 2, plen=11, max_new=6)
+    for r in base:
+        e.enqueue(r, 0.0)
+    _drive(e)
+    expected = [r.output_tokens for r in base]
+    assert all(len(o) == 6 for o in expected)
+
+    reqs = _mk_reqs(cfg, 2, plen=11, max_new=6)  # same seed -> same prompts
+    for r in reqs:
+        e.enqueue(r, 0.0)
+    for i in range(4):                           # partway through decode
+        e.step(0.01 * i)
+    exported = e.fail(0.04)
+    assert e.dead and not e.has_work and e.step(1.0) == []
+    assert e.pool.usage == 0.0 and e.n_failures == 1
+    assert sorted(r.req_id for r in exported) == [0, 1]
+    for r in exported:
+        assert r.state is RequestState.WAITING and r.n_recoveries == 1
+        assert r.prompt_len == 11 + len(r.resume_output or [])
+
+    e.restart()
+    assert not e.dead
+    for r in exported:
+        e.enqueue(r, 0.1)
+    _drive(e, now=0.1)
+    for r, want in zip(sorted(exported, key=lambda r: r.req_id), expected):
+        assert not r.error
+        assert r.full_output_tokens == want, "resume diverged from" \
+            " the uninterrupted stream"
+    e.pool.check_invariants()
+
+
+def test_engine_drain_exports_queue_keeps_residents(tiny_model,
+                                                    shared_runner):
+    cfg, params = tiny_model
+    ecfg = dataclasses.replace(shared_runner.ecfg, max_batch=1)
+    e = PagedRealEngine(1, cfg, params, ecfg,
+                        runner=shared_runner, n_sources=2)
+    reqs = _mk_reqs(cfg, 3, plen=9, max_new=4)
+    for r in reqs:
+        e.enqueue(r, 0.0)
+    for i in range(3):                 # admit one resident (max_batch=1)
+        e.step(0.01 * i)
+    assert len(e.running) == 1
+    exported = e.drain(0.03)
+    assert e.draining and not e.dead
+    assert len(exported) == 2 and all(
+        r.state is RequestState.WAITING for r in exported)
+    assert len(e.running) == 1         # resident keeps running
+    _drive(e, now=0.05)                # ... to completion
+    resident = [r for r in reqs if r not in exported]
+    assert resident[0].state is RequestState.FINISHED
+    e.release()
+    assert e.dead and e.pool.usage == 0.0
+
+
+# -------------------------------------------------------- cluster recovery
+def _mk_cluster(tiny_model, shared_runner, n_pages=48):
+    cfg, params = tiny_model
+    ecfg = dataclasses.replace(shared_runner.ecfg, n_pages=n_pages)
+    return [PagedRealEngine(i, cfg, params, ecfg,
+                            runner=shared_runner, n_sources=2)
+            for i in range(2)]
+
+
+def _cluster_reqs(cfg, n=8, seed=5):
+    rng = np.random.default_rng(seed)
+    return [Request(req_id=i, prompt_len=10, max_new_tokens=5,
+                    arrival_time=0.1 * i,
+                    prompt_tokens=rng.integers(0, cfg.vocab_size,
+                                               10).tolist())
+            for i in range(n)]
+
+
+_FT_CFG = dict(window_tokens=200,
+               health_cfg=HealthConfig(trace_timeout_s=0.3))
+
+
+def _assert_recovery_invariants(reqs, res, baseline_out, orig_max_new,
+                                engines):
+    lost = [r.req_id for r in reqs
+            if r.state is not RequestState.FINISHED and not r.error]
+    assert not lost, f"requests silently lost: {lost}"
+    finished_ids = [r.req_id for e in engines for r in e.finished]
+    assert len(finished_ids) == len(set(finished_ids)), \
+        "a request finished twice (duplicated by re-dispatch)"
+    for r in reqs:
+        if r.error:
+            continue
+        out = r.full_output_tokens
+        assert len(out) == orig_max_new[r.req_id]
+        assert out == baseline_out[r.req_id], \
+            f"req {r.req_id} diverged after recovery"
+    assert res.signals["unfinished"] == 0
+
+
+def test_cluster_crash_redispatch_rejoin(tiny_model, shared_runner):
+    """Deterministic headline run: engine 1 crashes mid-stream and later
+    recovers. The monitor fences it, its residents re-dispatch to engine 0
+    and finish token-exact, and the rejoined engine serves again."""
+    cfg, _ = tiny_model
+
+    baseline = _cluster_reqs(cfg)
+    serve_real_cluster(baseline, _mk_cluster(tiny_model, shared_runner),
+                       cluster_cfg=RealClusterConfig(**_FT_CFG))
+    assert all(r.state is RequestState.FINISHED and not r.error
+               for r in baseline)
+    baseline_out = {r.req_id: r.output_tokens for r in baseline}
+
+    reqs = _cluster_reqs(cfg)
+    orig = {r.req_id: r.max_new_tokens for r in reqs}
+    engines = _mk_cluster(tiny_model, shared_runner)
+    # crash at t=0.4 (several requests resident on engine 1), detection at
+    # +trace_timeout, recovery well before the tail finishes so the rejoin
+    # is observable inside the run
+    plan = FaultPlan(events=(FaultEvent("crash", 1, 8),
+                             FaultEvent("recover", 1, 16)))
+    res = serve_real_cluster(
+        reqs, engines,
+        cluster_cfg=RealClusterConfig(fault_plan=plan, **_FT_CFG))
+
+    _assert_recovery_invariants(reqs, res, baseline_out, orig, engines)
+    assert not any(r.error for r in reqs)
+    assert res.signals["n_failures"] == 1
+    assert res.signals["recovered_requests"] >= 1
+    assert res.signals["recovery_recompute_tokens"] > 0
+    events = [ev["event"] for ev in res.signals["health_events"]
+              if ev["engine"] == 1]
+    assert "down" in events and "rejoin" in events
+    # the rejoined engine is dispatchable again (fresh trace re-admitted)
+    assert not engines[1].dead
+
+
+def test_cluster_drain_releases_engine(tiny_model, shared_runner):
+    cfg, _ = tiny_model
+    reqs = _cluster_reqs(cfg, n=6)
+    engines = _mk_cluster(tiny_model, shared_runner)
+    plan = FaultPlan(events=(FaultEvent("drain", 1, 6),))
+    res = serve_real_cluster(
+        reqs, engines,
+        cluster_cfg=RealClusterConfig(fault_plan=plan, **_FT_CFG))
+    assert all(r.state is RequestState.FINISHED and not r.error
+               for r in reqs)
+    assert 1 in res.signals["drained_engines"]
+    assert engines[1].dead and engines[1].pool.usage == 0.0
+    assert any(ev["event"] == "scale_down" and ev["engine"] == 1
+               for ev in res.signals["elastic_events"])
+    # residents were allowed to finish in place: only queued work moved
+    assert all(r.n_recoveries == 0 for r in reqs
+               if r.state is RequestState.FINISHED and r.engine_id == 1)
+
+
+@pytest.mark.slow
+def test_cluster_chaos_property(tiny_model, shared_runner):
+    """For ANY seeded FaultPlan: no request lost or duplicated, every
+    non-quarantined request finishes with its full token budget, and all
+    outputs are bit-exact vs the fault-free run."""
+    cfg, _ = tiny_model
+
+    baseline = _cluster_reqs(cfg, n=10)
+    serve_real_cluster(baseline, _mk_cluster(tiny_model, shared_runner),
+                       cluster_cfg=RealClusterConfig(**_FT_CFG))
+    baseline_out = {r.req_id: r.output_tokens for r in baseline}
+
+    for seed in (0, 1, 2):
+        plan = FaultPlan.random(seed, 2, horizon_rounds=80, detect_rounds=8)
+        reqs = _cluster_reqs(cfg, n=10)
+        orig = {r.req_id: r.max_new_tokens for r in reqs}
+        engines = _mk_cluster(tiny_model, shared_runner)
+        res = serve_real_cluster(
+            reqs, engines,
+            cluster_cfg=RealClusterConfig(fault_plan=plan, **_FT_CFG))
+        _assert_recovery_invariants(reqs, res, baseline_out, orig, engines)
+        for e in engines:
+            e.pool.check_invariants()

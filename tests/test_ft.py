@@ -1,5 +1,7 @@
-"""Fault tolerance: checkpoint atomicity/roundtrip, health, elastic, and
-gradient compression."""
+"""Fault tolerance: checkpoint atomicity/roundtrip, health, elastic,
+cluster crash recovery + control-plane snapshots, and gradient
+compression."""
+import dataclasses
 import os
 
 import jax
@@ -9,9 +11,11 @@ import pytest
 
 from repro.configs import get_smoke_config
 from repro.core import EngineTrace, GimbalScheduler, TraceTable
-from repro.ft import (ElasticController, EngineHealthMonitor, HealthConfig,
-                      checkpoint_step, restore_checkpoint, save_checkpoint,
-                      restore_serving_state, save_serving_state)
+from repro.ft import (ElasticController, EngineHealthMonitor, FaultEvent,
+                      FaultPlan, HealthConfig, checkpoint_step,
+                      restore_checkpoint, restore_serving_extra,
+                      restore_serving_state, save_checkpoint,
+                      save_serving_state)
 from repro.models import build_model
 from repro.train import (AdamWConfig, compress_grads_int8, make_train_state,
                          make_train_step)
@@ -90,6 +94,108 @@ def test_elastic_scale_up_down():
     assert sched.select_engine(10, 0.0) in (0, 1, 2)
     ec.scale_down(0, drain=lambda e: 0)
     assert 0 not in table.engine_ids
+
+
+def test_serving_state_carries_trace_scalars(tmp_path):
+    path = str(tmp_path / "sstate")
+    table = TraceTable([0, 1])
+    table.report(EngineTrace(0, kv_usage=0.5, n_running=3), now=1.0)
+    table.report(EngineTrace(1, moe_pressure=0.2), now=1.5)
+    save_serving_state(path, placement_assign=np.zeros((1, 2), np.int64),
+                       profiler_B=np.zeros((1, 2), np.int64),
+                       profiler_A=np.zeros((1, 1, 2), np.int64),
+                       scheduler_comp={}, traces=table.scalar_snapshot())
+    snap = restore_serving_extra(path)["traces"]
+    fresh = TraceTable([0, 1])
+    fresh.restore_scalars(snap)
+    t0, t1 = fresh.get(0), fresh.get(1)
+    assert t0.kv_usage == 0.5 and t0.n_running == 3 and t0.timestamp == 1.0
+    assert t1.moe_pressure == 0.2
+    assert fresh.complete()
+    # restored engines owe a full prefix digest on their next trace
+    assert fresh.needs_resync(0) and fresh.needs_resync(1)
+
+
+# ------------------------------------------------- real-plane cluster FT
+def _cluster(tiny_model, shared_runner):
+    from repro.serving import PagedRealEngine
+    cfg, params = tiny_model
+    ecfg = dataclasses.replace(shared_runner.ecfg, n_pages=48)
+    return [PagedRealEngine(i, cfg, params, ecfg,
+                            runner=shared_runner, n_sources=2)
+            for i in range(2)]
+
+
+def _reqs(cfg, n=8, seed=5, rid0=0):
+    from repro.serving import Request
+    rng = np.random.default_rng(seed)
+    return [Request(req_id=rid0 + i, prompt_len=10, max_new_tokens=5,
+                    arrival_time=0.1 * i,
+                    prompt_tokens=rng.integers(0, cfg.vocab_size,
+                                               10).tolist())
+            for i in range(n)]
+
+
+@pytest.mark.slow
+def test_cluster_crash_redispatch_rejoin_e2e(tiny_model, shared_runner):
+    """Engine 1 crashes mid-run and rejoins: the health monitor fences it
+    (down event), its exported requests finish token-exact on engine 0,
+    and a fresh trace re-admits the restarted engine (rejoin event)."""
+    from repro.serving import (RealClusterConfig, RequestState,
+                               serve_real_cluster)
+    cfg, _ = tiny_model
+    base = _reqs(cfg)
+    serve_real_cluster(base, _cluster(tiny_model, shared_runner),
+                       cluster_cfg=RealClusterConfig(
+                           window_tokens=200,
+                           health_cfg=HealthConfig(trace_timeout_s=0.3)))
+    want = {r.req_id: r.output_tokens for r in base}
+
+    reqs = _reqs(cfg)
+    res = serve_real_cluster(
+        reqs, _cluster(tiny_model, shared_runner),
+        cluster_cfg=RealClusterConfig(
+            window_tokens=200,
+            health_cfg=HealthConfig(trace_timeout_s=0.3),
+            fault_plan=FaultPlan(events=(FaultEvent("crash", 1, 8),
+                                         FaultEvent("recover", 1, 16)))))
+    assert all(r.state is RequestState.FINISHED and not r.error
+               for r in reqs)
+    assert all(r.full_output_tokens == want[r.req_id] for r in reqs)
+    assert res.signals["recovered_requests"] >= 1
+    ev = [e["event"] for e in res.signals["health_events"]
+          if e["engine"] == 1]
+    assert ev == ["down", "rejoin"]
+
+
+@pytest.mark.slow
+def test_cluster_snapshot_restore_resume(tiny_model, shared_runner,
+                                         tmp_path):
+    """Periodic control-plane snapshots behind the config knob, and a new
+    cluster instance restoring from one resumes with learned state
+    (scheduler compensation + trace scalars) and serves correctly."""
+    from repro.serving import (RealClusterConfig, RequestState,
+                               serve_real_cluster)
+    cfg, _ = tiny_model
+    path = str(tmp_path / "cluster_state")
+    res1 = serve_real_cluster(
+        _reqs(cfg), _cluster(tiny_model, shared_runner),
+        cluster_cfg=RealClusterConfig(window_tokens=200,
+                                      snapshot_every_rounds=5,
+                                      snapshot_path=path))
+    assert res1.signals["unfinished"] == 0
+    extra = restore_serving_extra(path)
+    assert set(extra["traces"].keys()) == {"0", "1"}
+    assert checkpoint_step(path) % 5 == 0
+
+    reqs2 = _reqs(cfg, rid0=100, seed=9)
+    res2 = serve_real_cluster(
+        reqs2, _cluster(tiny_model, shared_runner),
+        cluster_cfg=RealClusterConfig(window_tokens=200,
+                                      restore_from=path))
+    assert all(r.state is RequestState.FINISHED and not r.error
+               for r in reqs2)
+    assert res2.signals["unfinished"] == 0
 
 
 def test_gradient_compression_bounded_error_and_trains():
