@@ -40,12 +40,13 @@ def _requests(cfg, n, seed=5):
     return reqs
 
 
-def _serve(cfg, params, runner, ecfg, n_req, *, fault_plan=None):
+def _serve(cfg, params, runner, ecfg, n_req, *, fault_plan=None,
+           tier=None):
     from repro.ft.health import HealthConfig
     from repro.serving import (PagedRealEngine, RealClusterConfig,
                                RequestState, serve_real_cluster)
     engines = [PagedRealEngine(i, cfg, params, ecfg, runner=runner,
-                               n_sources=2) for i in range(2)]
+                               n_sources=2, tier=tier) for i in range(2)]
     reqs = _requests(cfg, n_req)
     t0 = time.perf_counter()
     res = serve_real_cluster(
@@ -68,6 +69,10 @@ def _serve(cfg, params, runner, ecfg, n_req, *, fault_plan=None):
         "shed_requests": res.signals["shed_requests"],
         "quarantined": res.signals["quarantined"],
         "health_events": res.signals["health_events"],
+        "drained_engines": res.signals["drained_engines"],
+        "swapped_out_reqs": res.signals["swapped_out_reqs"],
+        "swapped_in_reqs": res.signals["swapped_in_reqs"],
+        "swap_in_bytes": res.signals["swap_in_bytes"],
     }
 
 
@@ -113,6 +118,25 @@ def run() -> None:
         assert r.full_output_tokens == want[r.req_id], \
             f"req {r.req_id} diverged after recovery"
 
+    # swap-based drain: engine 1 scales in mid-run with a host KV tier
+    # shared across the node — its residents export through the tier WITH
+    # their progress, and the re-dispatch target re-attaches their pages
+    # instead of re-prefilling (recovery_recompute_tokens stays ~0, vs
+    # the resume-prompt fallback a tier-less fleet pays)
+    from repro.serving import HostKVTier
+    drain_plan = FaultPlan(events=(FaultEvent("drain", 1, 10),))
+    d_reqs, d_res, r_drain = _serve(cfg, params, runner, ecfg, n_req,
+                                    fault_plan=drain_plan,
+                                    tier=HostKVTier())
+    assert r_drain["served"] == n_req and not any(r.error for r in d_reqs)
+    assert r_drain["drained_engines"] == [1]
+    for r in d_reqs:
+        assert r.full_output_tokens == want[r.req_id], \
+            f"req {r.req_id} diverged after tiered drain"
+    if r_drain["swapped_in_reqs"] > 0:     # residents moved through the tier
+        assert r_drain["recovery_recompute_tokens"] == 0, \
+            "tier-backed drain still re-prefilled a resident"
+
     tax = r_crash["wall_s"] / max(r_base["wall_s"], 1e-9) - 1.0
     emit("fault_recovery_fault_free", r_base["wall_s"] * 1e6,
          f"served={r_base['served']}")
@@ -120,13 +144,19 @@ def run() -> None:
          f"recovered={r_crash['recovered_requests']} "
          f"recompute_tok={r_crash['recovery_recompute_tokens']} "
          f"wall_tax={tax:.2f}")
+    emit("fault_recovery_drain_tier", r_drain["wall_s"] * 1e6,
+         f"swapped={r_drain['swapped_in_reqs']} "
+         f"recompute_tok={r_drain['recovery_recompute_tokens']}")
     payload = {
         "config": {"model": cfg.name, "n_layers": cfg.n_layers,
                    "n_requests": n_req, "page_size": ecfg.page_size,
                    "n_pages": ecfg.n_pages, "backend": ecfg.attn_backend,
-                   "plan": [dataclasses.asdict(ev) for ev in plan.events]},
+                   "plan": [dataclasses.asdict(ev) for ev in plan.events],
+                   "drain_plan": [dataclasses.asdict(ev)
+                                  for ev in drain_plan.events]},
         "fault_free": r_base,
         "crash": r_crash,
+        "drain_tier": r_drain,
         "wall_overhead_frac": tax,
         "bit_exact_vs_fault_free": True,     # asserted above
         "compile_s": compile_s,

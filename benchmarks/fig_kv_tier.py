@@ -1,0 +1,265 @@
+"""Tiered KV smoke bench (BENCH_kv_tier).
+
+Three claims behind ``PagedEngineConfig(kv_dtype=..., swap_policy=...)``
+and ``serving/kv_tier.py``:
+
+* **swap beats recompute under KV pressure (real plane)** — a pool too
+  small for the workload, backed by the host tier, serves the stream to
+  outputs bit-identical to a roomy reference with *zero* re-prefilled
+  tokens; the same tight pool in classic recompute mode must re-prefill
+  its preemption victims (or thrash without finishing);
+* **int8 pages roughly double capacity** — at equal pool bytes the
+  quantized page layout (int8 values + per-(token, head) fp32 scales)
+  holds >= 1.8x the resident tokens of the fp16 layout at head_dim=64,
+  measured off the real page arrays, and an int8-paged engine serves a
+  stream end to end through dequant-on-read attention;
+* **the measured cost model beats both fixed policies (sim plane)** — on
+  a workload mixing tiny victims (swap's fixed transfer latency loses)
+  and large victims (re-prefill loses), ``swap_policy="auto"`` prices
+  each preemption with :class:`SwapCostModel` and achieves mean modeled
+  TTFT no worse than always-swap and always-recompute.
+
+Emits ``experiments/bench/BENCH_kv_tier.json``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from benchmarks.common import FAST, emit, save_json, warm_prefill_buckets
+
+
+# ---------------------------------------------------------------- real plane
+def _requests(cfg, n, plen, max_new, seed=11):
+    from repro.serving import Request
+    rng = np.random.default_rng(seed)
+    return [Request(req_id=i, prompt_len=plen, max_new_tokens=max_new,
+                    arrival_time=0.001 * i,
+                    prompt_tokens=rng.integers(0, cfg.vocab_size,
+                                               plen).tolist())
+            for i in range(n)]
+
+
+def _drive(engine, reqs, max_steps=400):
+    for r in reqs:
+        engine.enqueue(r, 0.0)
+    now = 0.0
+    for _ in range(max_steps):
+        engine.step(now)
+        now += 0.01
+        if not engine.has_work:
+            break
+
+
+def _real_swap_vs_recompute(cfg, params, runner, n_req):
+    from repro.serving import HostKVTier, PagedRealEngine, RequestState
+    roomy = dataclasses.replace(runner.ecfg, n_pages=40,
+                                prefix_sharing=True)
+    tight = dataclasses.replace(roomy, n_pages=12)
+    plen, max_new = 16, 10
+
+    def serve(ecfg, tier, tag):
+        eng = PagedRealEngine(0, cfg, params, ecfg, runner=runner,
+                              tier=tier)
+        reqs = _requests(cfg, n_req, plen, max_new)
+        t0 = time.perf_counter()
+        _drive(eng, reqs, max_steps=150 * n_req)
+        wall = time.perf_counter() - t0
+        eng.pool.check_invariants()
+        return eng, reqs, {
+            "tag": tag, "n_pages": ecfg.n_pages, "wall_s": wall,
+            "served": sum(1 for r in reqs
+                          if r.state is RequestState.FINISHED
+                          and not r.error),
+            "prefill_tokens": eng.total_prefill_tokens,
+            "swapped_out_reqs": getattr(eng.pool,
+                                        "stat_swapped_out_reqs", 0),
+            "swapped_in_reqs": getattr(eng.pool,
+                                       "stat_swapped_in_reqs", 0),
+        }
+
+    _, ref_reqs, r_ref = serve(roomy, None, "roomy_reference")
+    _, rec_reqs, r_rec = serve(tight, None, "tight_recompute")
+    eng_sw, sw_reqs, r_sw = serve(
+        dataclasses.replace(tight, swap_policy="swap"), HostKVTier(),
+        "tight_tier_swap")
+
+    workload_prefill = n_req * plen
+    assert r_ref["served"] == r_sw["served"] == n_req
+    for a, b in zip(sw_reqs, ref_reqs):
+        assert a.output_tokens == b.output_tokens, \
+            f"req {a.req_id} diverged through the tier"     # fp bit-exact
+    assert r_sw["swapped_out_reqs"] > 0, "pool never pressured the tier"
+    assert r_sw["prefill_tokens"] == workload_prefill, \
+        "tier run re-prefilled a swapped victim"
+    # the recompute baseline on the same tight pool pays for its victims
+    # in re-prefilled tokens (thrash may even keep it from finishing)
+    assert r_rec["prefill_tokens"] > workload_prefill or \
+        r_rec["served"] < n_req, "tight pool never forced recompute"
+
+    tier_stats = {"d2h_bw": eng_sw.swap_cost.d2h_bw,
+                  "h2d_bw": eng_sw.swap_cost.h2d_bw,
+                  "prefill_tps": eng_sw.swap_cost.prefill_tps}
+    emit("kv_tier_swap_real", r_sw["wall_s"] * 1e6,
+         f"prefill_tok={r_sw['prefill_tokens']}/{workload_prefill} "
+         f"swaps={r_sw['swapped_out_reqs']} bit_exact=1")
+    emit("kv_tier_recompute_real", r_rec["wall_s"] * 1e6,
+         f"prefill_tok={r_rec['prefill_tokens']}/{workload_prefill} "
+         f"served={r_rec['served']}/{n_req}")
+    return {"workload_prefill_tokens": workload_prefill,
+            "roomy_reference": r_ref, "tight_recompute": r_rec,
+            "tight_tier_swap": r_sw, "bit_exact_vs_reference": True,
+            "measured_cost_model": tier_stats}
+
+
+# ---------------------------------------------------------------- int8 pages
+def _int8_capacity(cfg, params, runner, n_req):
+    from repro.configs.base import reduced
+    from repro.models.transformer import (init_paged_cache,
+                                          paged_cache_page_nbytes)
+    from repro.serving import PagedRealEngine, RequestState
+
+    # measured per-page bytes at the paper-scale head_dim
+    c64 = reduced(cfg, head_dim=64)
+    nb_fp = paged_cache_page_nbytes(init_paged_cache(c64, 2, 8))
+    nb_i8 = paged_cache_page_nbytes(init_paged_cache(c64, 2, 8,
+                                                     kv_dtype="int8"))
+    budget = 64 * nb_fp                    # equal pool bytes
+    tokens_fp = (budget // nb_fp) * 8
+    tokens_i8 = (budget // nb_i8) * 8
+    ratio = tokens_i8 / tokens_fp
+    assert ratio >= 1.8, f"int8 capacity ratio {ratio:.2f} < 1.8"
+
+    # the quantized pool actually serves (dequant-on-read attention)
+    ecfg = dataclasses.replace(runner.ecfg, n_pages=40, kv_dtype="int8")
+    eng = PagedRealEngine(0, cfg, params, ecfg, n_sources=2)
+    reqs = _requests(cfg, n_req, 12, 6, seed=6)
+    t0 = time.perf_counter()
+    _drive(eng, reqs)
+    wall = time.perf_counter() - t0
+    assert all(r.state is RequestState.FINISHED and not r.error
+               for r in reqs)
+    emit("kv_tier_int8_capacity", wall * 1e6,
+         f"tokens_ratio={ratio:.2f} page_bytes_fp={nb_fp} "
+         f"page_bytes_int8={nb_i8}")
+    return {"head_dim": 64, "page_bytes_fp": nb_fp,
+            "page_bytes_int8": nb_i8, "pool_bytes": budget,
+            "resident_tokens_fp": tokens_fp,
+            "resident_tokens_int8": tokens_i8,
+            "capacity_ratio": ratio, "int8_served": len(reqs),
+            "int8_serve_wall_s": wall}
+
+
+# ---------------------------------------------------------------- cost model
+def _sim_policy_sweep():
+    """Modeled TTFT under the three preemption policies on a two-phase
+    victim mix over a slow modeled host link (1e8 B/s — between the
+    roofline's per-token re-prefill cost and its per-step decode-replay
+    cost, so neither side dominates):
+
+    * a freshly-prefilled large request is preempted by a short arrival
+      — recompute re-runs a cheap prefill, swap moves a big table over
+      the slow link (always-swap loses here);
+    * a deep-decode request is preempted by a later prefill's growth —
+      recompute replays every generated token as a full decode step,
+      swap moves a small table (always-recompute loses here).
+
+    ``auto`` prices each victim with the engine's SwapCostModel and takes
+    the cheap side of both trades."""
+    from repro.serving import (DPEngine, EngineConfig, HostKVTier, Request,
+                               RequestState)
+    # (prompt_len, max_new_tokens, arrival_time): D deep-decoder, then
+    # L/S large waves whose admissions force the two victim classes
+    arrivals = [(8, 150, 0.0), (100, 30, 0.2), (100, 2, 0.26),
+                (100, 30, 1.1), (100, 2, 1.16)]
+
+    def run(policy):
+        cfg = EngineConfig(token_budget=64, max_running=8, kv_tokens=192,
+                           kv_block=8, swap_policy=policy)
+        eng = DPEngine(0, cfg, tier=HostKVTier())
+        eng.swap_cost.d2h_bw = eng.swap_cost.h2d_bw = 1e8
+        reqs = [Request(req_id=i, prompt_len=p, max_new_tokens=m,
+                        arrival_time=t)
+                for i, (p, m, t) in enumerate(arrivals)]
+        pending = sorted(reqs, key=lambda r: r.arrival_time)
+        now = 0.0
+        for _ in range(8000):
+            while pending and pending[0].arrival_time <= now:
+                eng.enqueue(pending.pop(0), now)
+            dur, _, _ = eng.step(now)
+            now += max(dur, 1e-4)
+            if pending and not eng.has_work:
+                now = max(now, pending[0].arrival_time)
+            if not pending and not eng.has_work:
+                break
+        assert all(r.state is RequestState.FINISHED for r in reqs), \
+            f"policy={policy} left work unfinished"
+        ttft = [r.first_token_time - r.arrival_time for r in reqs]
+        return {"policy": policy, "mean_ttft_s": float(np.mean(ttft)),
+                "p99_ttft_s": float(np.max(ttft)),
+                "makespan_s": now,
+                "preemptions": sum(r.n_preemptions for r in reqs),
+                "swapped_out_reqs": getattr(eng.pool,
+                                            "stat_swapped_out_reqs", 0)}
+
+    rec = run("recompute")
+    swp = run("swap")
+    auto = run("auto")
+    assert auto["mean_ttft_s"] < rec["mean_ttft_s"], \
+        "auto lost to always-recompute"
+    assert auto["mean_ttft_s"] < swp["mean_ttft_s"], \
+        "auto lost to always-swap"
+    assert auto["swapped_out_reqs"] > 0 and \
+        auto["swapped_out_reqs"] < auto["preemptions"], \
+        "auto never actually mixed swap and recompute"
+    emit("kv_tier_policy_auto", auto["mean_ttft_s"] * 1e6,
+         f"recompute_ttft_us={rec['mean_ttft_s'] * 1e6:.0f} "
+         f"swap_ttft_us={swp['mean_ttft_s'] * 1e6:.0f} "
+         f"auto_swaps={auto['swapped_out_reqs']}")
+    return {"recompute": rec, "swap": swp, "auto": auto}
+
+
+def run() -> None:
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.configs.base import reduced
+    from repro.models import build_model
+    from repro.serving import PagedEngineConfig, PagedModelRunner
+
+    cfg = reduced(get_smoke_config("qwen3-moe-30b-a3b"), n_layers=2)
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    ecfg = PagedEngineConfig(page_size=8, n_pages=40, max_blocks_per_req=6,
+                             max_batch=4, token_budget=16,
+                             chunk_buckets=(8, 16), attn_backend="xla")
+    runner = PagedModelRunner(cfg, params, ecfg, n_sources=2)
+    n_req = 4 if FAST else 8
+
+    t0 = time.perf_counter()
+    warm_prefill_buckets(runner, cfg)
+    compile_s = time.perf_counter() - t0
+
+    real = _real_swap_vs_recompute(cfg, params, runner, n_req)
+    quant = _int8_capacity(cfg, params, runner, 3 if FAST else 6)
+    policies = _sim_policy_sweep()
+
+    payload = {
+        "config": {"model": cfg.name, "n_layers": cfg.n_layers,
+                   "page_size": ecfg.page_size, "n_requests": n_req,
+                   "backend": ecfg.attn_backend},
+        "real_swap_vs_recompute": real,
+        "int8_capacity": quant,
+        "sim_policy_sweep": policies,
+        "compile_s": compile_s,
+    }
+    path = save_json("BENCH_kv_tier", payload)
+    emit("kv_tier_headline", 0.0,
+         f"swap_prefill_tok={real['tight_tier_swap']['prefill_tokens']} "
+         f"int8_ratio={quant['capacity_ratio']:.2f} "
+         f"auto_ttft_us={policies['auto']['mean_ttft_s'] * 1e6:.0f} "
+         f"json={path}")
+
+
+if __name__ == "__main__":
+    run()

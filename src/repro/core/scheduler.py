@@ -56,6 +56,12 @@ class SchedulerConfig:
     # applied to the KV cache. 0.0 disables the signal entirely and
     # bit-reproduces affinity-free dispatch.
     affinity_weight: float = 1.0
+    # tiered-KV pressure: tokens parked in the host tier (swapped_tokens,
+    # see serving/kv_tier.py) are future swap-in debt the engine must pay
+    # before those requests run again. Scaled into the score as a soft
+    # penalty; 0.0 (default) ignores the signal and bit-reproduces
+    # tier-free dispatch decisions.
+    swap_pressure_scale: float = 0.0
 
 
 class GimbalScheduler:
@@ -130,7 +136,8 @@ class GimbalScheduler:
         return (t.remaining_prefill_tokens - affinity_credit
                 + t.waiting_prefill_tokens
                 + self._compensation(t.engine_id, now)
-                + self._p_kv(t.kv_usage) + self._p_moe(t.moe_pressure))
+                + self._p_kv(t.kv_usage) + self._p_moe(t.moe_pressure)
+                + self.cfg.swap_pressure_scale * t.swapped_tokens)
 
     def _affinity_estimates(self, traces: Dict[int, EngineTrace],
                             prompt_tokens) -> Optional[Dict[int, float]]:

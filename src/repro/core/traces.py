@@ -108,6 +108,12 @@ class EngineTrace:
     n_stalled: int = 0                      # decode lanes stalled last step:
                                             # KV growth failed even after
                                             # preemption (hard KV pressure)
+    # tiered-KV signals (kv_tier.py; 0 when the engine has no tier):
+    # tokens of this engine's requests parked in the host tier — state
+    # that is NOT in kv_usage, which truthfully counts device-resident
+    # pages only — and host->device bytes restored since the last trace
+    swapped_tokens: float = 0.0
+    swap_in_bytes: float = 0.0
     # radix prefix-cache digest (None when the engine doesn't share):
     # a full PrefixSummary on first report / resync, a PrefixSummaryDelta
     # in steady state — TraceTable.report folds deltas into the stored
@@ -197,6 +203,8 @@ class TraceTable:
                 "n_running": int(t.n_running),
                 "n_waiting": int(t.n_waiting),
                 "n_stalled": int(t.n_stalled),
+                "swapped_tokens": float(t.swapped_tokens),
+                "swap_in_bytes": float(t.swap_in_bytes),
                 "timestamp": float(t.timestamp),
             }
         return out

@@ -39,13 +39,19 @@ class ElasticController:
                          "engine": engine_id})
 
     def scale_down(self, engine_id: int, now: float = 0.0,
-                   drain: Optional[Callable] = None) -> None:
+                   drain: Optional[Callable] = None,
+                   swapped: int = 0) -> None:
         self.scheduler.exclude(engine_id)      # stop new dispatch first
         moved = drain(engine_id) if drain is not None else 0
         self.table.remove_engine(engine_id)
         self._rebuild_placement(now)
-        self.log.append({"t": now, "event": "scale_down",
-                         "engine": engine_id, "requests_moved": moved})
+        entry = {"t": now, "event": "scale_down",
+                 "engine": engine_id, "requests_moved": moved}
+        if swapped:
+            # residents exported through the KV tier with progress intact
+            # (kv_tier.py): re-dispatch re-attaches pages, no recompute
+            entry["swapped_requests"] = swapped
+        self.log.append(entry)
 
     def _rebuild_placement(self, now: float) -> None:
         if self.coord is None:

@@ -1,0 +1,93 @@
+"""Int8 KV page pack/unpack kernels (per-row quantization scales).
+
+The paged pool's int8 mode (``PagedEngineConfig.kv_dtype="int8"``) stores
+each KV row (one token, one KV head) as int8 values plus one fp32 scale —
+``scale = max(|row|) / 127`` — so a fixed device pool holds roughly
+``2*hd / (hd + 4)`` times the tokens of the fp16 layout (~1.88x at
+``hd=128``). Per-row granularity (rather than one scalar per page) is what
+makes incremental writes possible: chunked prefill and decode append rows
+into a partially-filled page without requantizing earlier rows.
+
+``pack_kv``/``unpack_kv`` dispatch between a Pallas TPU kernel and an XLA
+fallback (identical math; the fallback runs on CPU and under SPMD). The
+pack is what the paged write path in ``models/transformer._paged_attention``
+applies before scattering into int8 pages; the unpack math is fused into
+the attention reads (``kernels/paged_decode`` dequantizes in-kernel).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def pack_kv_xla(t):
+    """(..., hd) fp -> ((..., hd) int8, (...) fp32 scales)."""
+    s = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1) / 127.0
+    q = jnp.round(t.astype(jnp.float32)
+                  / jnp.maximum(s, 1e-8)[..., None]).astype(jnp.int8)
+    return q, s
+
+
+def unpack_kv_xla(q, s, dtype=jnp.float32):
+    """Inverse of :func:`pack_kv_xla` (up to quantization error)."""
+    return (q.astype(jnp.float32) * s[..., None].astype(jnp.float32)) \
+        .astype(dtype)
+
+
+def _pack_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)            # (rows, hd)
+    s = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0   # (rows, 1)
+    q_ref[...] = jnp.round(x / jnp.maximum(s, 1e-8)).astype(jnp.int8)
+    s_ref[...] = s
+
+
+def _unpack_kernel(q_ref, s_ref, o_ref):
+    o_ref[...] = (q_ref[...].astype(jnp.float32) * s_ref[...]) \
+        .astype(o_ref.dtype)
+
+
+def pack_kv_pallas(t, *, interpret: bool = False):
+    """Pallas pack: same contract as :func:`pack_kv_xla`."""
+    shape = t.shape
+    hd = shape[-1]
+    x = t.reshape(-1, hd)
+    n = x.shape[0]
+    q, s = pl.pallas_call(
+        _pack_kernel,
+        out_shape=(jax.ShapeDtypeStruct((n, hd), jnp.int8),
+                   jax.ShapeDtypeStruct((n, 1), jnp.float32)),
+        interpret=interpret,
+    )(x)
+    return q.reshape(shape), s.reshape(shape[:-1])
+
+
+def unpack_kv_pallas(q, s, dtype=jnp.float32, *, interpret: bool = False):
+    """Pallas unpack: same contract as :func:`unpack_kv_xla`."""
+    shape = q.shape
+    hd = shape[-1]
+    out = pl.pallas_call(
+        _unpack_kernel,
+        out_shape=jax.ShapeDtypeStruct((int(s.size), hd), jnp.dtype(dtype)),
+        interpret=interpret,
+    )(q.reshape(-1, hd), s.reshape(-1, 1).astype(jnp.float32))
+    return out.reshape(shape)
+
+
+def pack_kv(t, *, backend: str = "auto", interpret: bool = False):
+    """Quantize KV rows. backend: auto | pallas | xla (auto picks the
+    Pallas kernel on TPU, the XLA path elsewhere)."""
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if backend == "pallas":
+        return pack_kv_pallas(t, interpret=interpret)
+    return pack_kv_xla(t)
+
+
+def unpack_kv(q, s, dtype=jnp.float32, *, backend: str = "auto",
+              interpret: bool = False):
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if backend == "pallas":
+        return unpack_kv_pallas(q, s, dtype, interpret=interpret)
+    return unpack_kv_xla(q, s, dtype)

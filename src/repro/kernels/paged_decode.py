@@ -32,8 +32,15 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _kernel(bt_ref, q_ref, k_ref, v_ref, ctx_ref, o_ref,
-            m_scr, l_scr, acc_scr, *, scale, page_size, n_blocks):
+def _kernel(bt_ref, q_ref, k_ref, v_ref, ctx_ref, *rest,
+            scale, page_size, n_blocks, quant):
+    # args after ctx_ref: [k_scale_ref, v_scale_ref (quant only)], o_ref,
+    # then the three scratch buffers
+    if quant:
+        ks_ref, vs_ref, o_ref = rest[0], rest[1], rest[2]
+    else:
+        o_ref = rest[0]
+    m_scr, l_scr, acc_scr = rest[-3], rest[-2], rest[-1]
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -43,8 +50,11 @@ def _kernel(bt_ref, q_ref, k_ref, v_ref, ctx_ref, o_ref,
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
     q = q_ref[0]                                  # (Hq, hd)
-    k = k_ref[0]                                  # (ps, Hkv, hd)
-    v = v_ref[0]
+    k = k_ref[0].astype(jnp.float32)              # (ps, Hkv, hd)
+    v = v_ref[0].astype(jnp.float32)
+    if quant:                                     # int8 pages: dequant on read
+        k = k * ks_ref[0][..., None]              # scales (ps, Hkv)
+        v = v * vs_ref[0][..., None]
     ctx = ctx_ref[0, 0]                           # scalar: live tokens
 
     Hq, hd = q.shape
@@ -57,7 +67,7 @@ def _kernel(bt_ref, q_ref, k_ref, v_ref, ctx_ref, o_ref,
     valid = kpos < ctx
 
     s = jnp.einsum("kgd,lkd->kgl", qg.astype(jnp.float32),
-                   k.astype(jnp.float32)) * scale      # (Hkv, G, ps)
+                   k) * scale                          # (Hkv, G, ps)
     s = jnp.where(valid[None, None, :], s, NEG_INF)
 
     m_prev = m_scr[...]                                # (Hkv, G)
@@ -67,7 +77,7 @@ def _kernel(bt_ref, q_ref, k_ref, v_ref, ctx_ref, o_ref,
     corr = jnp.exp(m_prev - m_new)
     l_new = l_scr[...] * corr + jnp.sum(p, axis=-1)
     acc_scr[...] = acc_scr[...] * corr[..., None] + jnp.einsum(
-        "kgl,lkd->kgd", p, v.astype(jnp.float32))
+        "kgl,lkd->kgd", p, v)
     m_scr[...] = m_new
     l_scr[...] = l_new
 
@@ -78,29 +88,41 @@ def _kernel(bt_ref, q_ref, k_ref, v_ref, ctx_ref, o_ref,
 
 
 def paged_decode_pallas(q, k_pages, v_pages, block_tables, ctx_lens, *,
+                        k_scales=None, v_scales=None,
                         interpret: bool = False):
     """q (B, Hq, hd); pages (P, ps, Hkv, hd); block_tables (B, NB) int32
-    physical page ids (0-filled past the context); ctx_lens (B,) int32."""
+    physical page ids (0-filled past the context); ctx_lens (B,) int32.
+    ``k_scales``/``v_scales`` (P, ps, Hkv) fp32 mark int8 pages — the
+    kernel dequantizes each fetched page tile in-register (kv_pack.py)."""
     B, Hq, hd = q.shape
     P, ps, Hkv, _ = k_pages.shape
     _, NB = block_tables.shape
     scale = 1.0 / np.sqrt(hd)
     G = Hq // Hkv
     bt = block_tables.astype(jnp.int32)
+    quant = k_scales is not None
 
     kernel = functools.partial(_kernel, scale=scale, page_size=ps,
-                               n_blocks=NB)
+                               n_blocks=NB, quant=quant)
+    in_specs = [
+        pl.BlockSpec((1, Hq, hd), lambda b, j, bt: (b, 0, 0)),
+        pl.BlockSpec((1, ps, Hkv, hd),
+                     lambda b, j, bt: (bt[b, j], 0, 0, 0)),
+        pl.BlockSpec((1, ps, Hkv, hd),
+                     lambda b, j, bt: (bt[b, j], 0, 0, 0)),
+        pl.BlockSpec((1, 1), lambda b, j, bt: (b, 0)),
+    ]
+    args = [bt, q, k_pages, v_pages, ctx_lens[:, None].astype(jnp.int32)]
+    if quant:
+        in_specs += [
+            pl.BlockSpec((1, ps, Hkv), lambda b, j, bt: (bt[b, j], 0, 0)),
+            pl.BlockSpec((1, ps, Hkv), lambda b, j, bt: (bt[b, j], 0, 0)),
+        ]
+        args += [k_scales.astype(jnp.float32), v_scales.astype(jnp.float32)]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,                    # the block table
         grid=(B, NB),
-        in_specs=[
-            pl.BlockSpec((1, Hq, hd), lambda b, j, bt: (b, 0, 0)),
-            pl.BlockSpec((1, ps, Hkv, hd),
-                         lambda b, j, bt: (bt[b, j], 0, 0, 0)),
-            pl.BlockSpec((1, ps, Hkv, hd),
-                         lambda b, j, bt: (bt[b, j], 0, 0, 0)),
-            pl.BlockSpec((1, 1), lambda b, j, bt: (b, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, Hq, hd), lambda b, j, bt: (b, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((Hkv, G), jnp.float32),        # running max m
@@ -113,10 +135,11 @@ def paged_decode_pallas(q, k_pages, v_pages, block_tables, ctx_lens, *,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, Hq, hd), q.dtype),
         interpret=interpret,
-    )(bt, q, k_pages, v_pages, ctx_lens[:, None].astype(jnp.int32))
+    )(*args)
 
 
-def paged_decode_xla(q, k_pages, v_pages, block_tables, ctx_lens):
+def paged_decode_xla(q, k_pages, v_pages, block_tables, ctx_lens,
+                     k_scales=None, v_scales=None):
     """Gather fallback: materialise each request's dense KV view, then do the
     masked-softmax attention in fp32 (identical math to the kernel)."""
     B, Hq, hd = q.shape
@@ -126,6 +149,9 @@ def paged_decode_xla(q, k_pages, v_pages, block_tables, ctx_lens):
     bt = block_tables.astype(jnp.int32)
     kd = k_pages[bt].reshape(B, L, Hkv, hd).astype(jnp.float32)
     vd = v_pages[bt].reshape(B, L, Hkv, hd).astype(jnp.float32)
+    if k_scales is not None:                      # int8 pages: dequant on read
+        kd = kd * k_scales[bt].reshape(B, L, Hkv)[..., None]
+        vd = vd * v_scales[bt].reshape(B, L, Hkv)[..., None]
     kpos = jnp.arange(L, dtype=jnp.int32)[None]        # (1, L)
     valid = kpos < ctx_lens[:, None]                   # (B, L)
     G = Hq // Hkv
@@ -141,15 +167,19 @@ def paged_decode_xla(q, k_pages, v_pages, block_tables, ctx_lens):
 
 
 def paged_decode(q, k_pages, v_pages, block_tables, ctx_lens, *,
+                 k_scales=None, v_scales=None,
                  backend: str = "auto", interpret: bool = False):
     """Block-table flash decode. backend: auto | pallas | xla.
 
     ``auto`` picks the Pallas kernel on TPU and the XLA gather path
     elsewhere (CPU, or when the caches are SPMD-partitioned arrays whose
-    page axis Pallas cannot follow)."""
+    page axis Pallas cannot follow). Passing ``k_scales``/``v_scales``
+    (P, ps, Hkv) enables the int8-page dequant-on-read path."""
     if backend == "auto":
         backend = "pallas" if jax.default_backend() == "tpu" else "xla"
     if backend == "pallas":
         return paged_decode_pallas(q, k_pages, v_pages, block_tables,
-                                   ctx_lens, interpret=interpret)
-    return paged_decode_xla(q, k_pages, v_pages, block_tables, ctx_lens)
+                                   ctx_lens, k_scales=k_scales,
+                                   v_scales=v_scales, interpret=interpret)
+    return paged_decode_xla(q, k_pages, v_pages, block_tables, ctx_lens,
+                            k_scales, v_scales)

@@ -160,12 +160,18 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     return cache
 
 
-def init_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int):
+def init_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int,
+                     kv_dtype: str = "auto"):
     """Physical KV page pool: per super-block position k/v arrays of shape
     (n_super, n_pages, page_size, Hkv, hd). Page 0 is the reserved garbage
     page (see serving/paged.py) — allocators hand out ids >= 1, and masked
     writes land in page 0. Request state (block tables, lengths) lives
     outside the pytree and is passed per call.
+
+    ``kv_dtype="int8"`` stores quantized pages plus per-(token, head) fp32
+    scale arrays (kernels/kv_pack.py) — the same pool bytes hold roughly
+    ``2*hd/(hd+4)`` times the tokens of the fp layout; attention reads
+    dequantize on the fly. ``"auto"`` keeps the model dtype (bit-exact).
     """
     if cfg.family == "hybrid":
         raise NotImplementedError("paged KV: mamba state is not paged")
@@ -179,10 +185,43 @@ def init_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int):
                                   "unsupported in paged_decode")
     descs = period_descriptors(cfg)
     ns = n_super_blocks(cfg)
-    dt = jnp.dtype(cfg.dtype)
+    quant = kv_dtype == "int8"
+    dt = jnp.int8 if quant else jnp.dtype(cfg.dtype)
     shape = (ns, n_pages, page_size, cfg.n_kv_heads, cfg.head_dim)
-    return {f"pos{j}": {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
-            for j in range(len(descs))}
+    out = {}
+    for j in range(len(descs)):
+        c = {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+        if quant:
+            sshape = (ns, n_pages, page_size, cfg.n_kv_heads)
+            c["k_scale"] = jnp.zeros(sshape, jnp.float32)
+            c["v_scale"] = jnp.zeros(sshape, jnp.float32)
+        out[f"pos{j}"] = c
+    return out
+
+
+def paged_cache_page_nbytes(pages) -> int:
+    """Device bytes per page across every super-block slice and leaf
+    (values + scales): the transfer size one swapped page costs the
+    host tier (``serving/kv_tier.py`` byte accounting)."""
+    return sum(leaf.nbytes // leaf.shape[1]
+               for leaf in jax.tree.leaves(pages))
+
+
+def gather_pages(pages, page_ids):
+    """Gather whole page rows across the pool pytree -> a payload pytree
+    of shape (ns, len(page_ids), ...) per leaf. Device side of a KV tier
+    swap-out; the caller moves the result to host memory."""
+    ids = jnp.asarray(page_ids, jnp.int32)
+    return jax.tree.map(lambda a: a[:, ids], pages)
+
+
+def scatter_pages(pages, payload, page_ids):
+    """Scatter a :func:`gather_pages` payload back into (possibly
+    different) page rows — the device side of a KV tier swap-in."""
+    ids = jnp.asarray(page_ids, jnp.int32)
+    return jax.tree.map(
+        lambda a, p: a.at[:, ids].set(jnp.asarray(p, a.dtype)),
+        pages, payload)
 
 
 def copy_pages(pages, copies):
@@ -235,7 +274,13 @@ def _paged_attention(cfg, q, k, v, positions, cache, mode, paged):
     "ctx_lens" (B,) live tokens incl. this chunk, "backend", "interpret"}.
     Invalid rows (chunk padding / inactive decode lanes) write to garbage
     page 0 and attend to nothing.
+
+    int8 pools (``"k_scale" in cache``) quantize each written row through
+    ``kernels/kv_pack`` and scatter the per-(token, head) scales alongside;
+    reads dequantize on the fly (in-kernel for decode, post-gather for
+    chunked prefill).
     """
+    from repro.kernels.kv_pack import pack_kv
     from repro.kernels.paged_decode import paged_decode
 
     B, S = positions.shape
@@ -250,20 +295,38 @@ def _paged_attention(cfg, q, k, v, positions, cache, mode, paged):
     page = jnp.where(valid, bt[bidx, blk], 0).reshape(-1)
     off = jnp.where(valid, positions % ps, 0).reshape(-1)
     Hkv, hd = pk.shape[2], pk.shape[3]
-    ck = pk.at[page, off].set(k.reshape(B * S, Hkv, hd).astype(pk.dtype))
-    cv = pv.at[page, off].set(v.reshape(B * S, Hkv, hd).astype(pv.dtype))
+    quant = "k_scale" in cache
+    backend = paged.get("backend", "auto")
+    interpret = paged.get("interpret", False)
+    if quant:
+        kw, ksc = pack_kv(k, backend=backend, interpret=interpret)
+        vw, vsc = pack_kv(v, backend=backend, interpret=interpret)
+    else:
+        kw, vw, ksc, vsc = k, v, None, None
+    ck = pk.at[page, off].set(kw.reshape(B * S, Hkv, hd).astype(pk.dtype))
+    cv = pv.at[page, off].set(vw.reshape(B * S, Hkv, hd).astype(pv.dtype))
     new_cache = dict(cache, k=ck, v=cv)
+    cks = cvs = None
+    if quant:
+        cks = cache["k_scale"].at[page, off].set(ksc.reshape(B * S, Hkv))
+        cvs = cache["v_scale"].at[page, off].set(vsc.reshape(B * S, Hkv))
+        new_cache["k_scale"], new_cache["v_scale"] = cks, cvs
 
     if mode == "paged_decode":                         # S == 1, kernel path
         out = paged_decode(q[:, 0], ck, cv, bt, ctx,
-                           backend=paged.get("backend", "auto"),
-                           interpret=paged.get("interpret", False))
+                           k_scales=cks, v_scales=cvs,
+                           backend=backend, interpret=interpret)
         return out[:, None], new_cache
     # chunked prefill: dense gather of the request's pages (prior context +
     # the chunk just written), causal mask via absolute positions
     L = NB * ps
     kd = ck[bt].reshape(B, L, Hkv, hd)
     vd = cv[bt].reshape(B, L, Hkv, hd)
+    if quant:                                          # dequant the gather
+        kd = (kd.astype(jnp.float32)
+              * cks[bt].reshape(B, L, Hkv)[..., None]).astype(q.dtype)
+        vd = (vd.astype(jnp.float32)
+              * cvs[bt].reshape(B, L, Hkv)[..., None]).astype(q.dtype)
     kpos = jnp.arange(L, dtype=jnp.int32)[None]
     kpos = jnp.where(kpos < ctx[:, None], kpos, -1)
     out = flash_attention(q, kd, vd, q_pos=positions, k_pos=kpos,

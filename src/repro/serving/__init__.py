@@ -1,5 +1,8 @@
-from repro.serving.costmodel import CostModelConfig, EngineCostModel
+from repro.serving.costmodel import (CostModelConfig, EngineCostModel,
+                                     SwapCostConfig, SwapCostModel)
 from repro.serving.engine import DPEngine, EngineConfig
+from repro.serving.kv_tier import (HostKVTier, SwapRecord,
+                                   TieredSharedAllocator)
 from repro.serving.kvcache import BlockPool, SlotAllocator
 from repro.serving.paged import (GARBAGE_PAGE, PagedBlockAllocator,
                                  SharedPagedAllocator)
@@ -13,7 +16,9 @@ from repro.serving.simulator import (PAPER_SYSTEMS, SimResult, SystemConfig,
 from repro.serving.step_plan import (PlannerConfig, PrefillLane, StepPlan,
                                      StepPlanner, check_plan_invariants)
 
-__all__ = ["CostModelConfig", "EngineCostModel", "DPEngine", "EngineConfig",
+__all__ = ["CostModelConfig", "EngineCostModel", "SwapCostConfig",
+           "SwapCostModel", "DPEngine", "EngineConfig",
+           "HostKVTier", "SwapRecord", "TieredSharedAllocator",
            "BlockPool", "SlotAllocator", "GARBAGE_PAGE",
            "PagedBlockAllocator", "SharedPagedAllocator",
            "PagedEngineConfig", "PagedModelRunner",

@@ -61,6 +61,10 @@ class EngineCostModel:
         comp = 2.0 * self.cfg.active_params * n_seqs / self.cfg.eff_flops
         return max(mem, comp)
 
+    def recompute_tokens_equivalent(self, seconds: float) -> float:
+        """Prefill tokens recomputable in ``seconds`` (for swap pricing)."""
+        return seconds * self.cfg.eff_flops / (2.0 * self.cfg.active_params)
+
     def step_time(self, prefill_tokens: int, n_decode: int,
                   decode_context: int, moe_imbalance: float = 1.0,
                   remote_frac: float = 0.0) -> float:
@@ -78,3 +82,88 @@ class EngineCostModel:
                  * self.cfg.a2a_bytes_per_token * self.cfg.n_moe_layers
                  / self.cfg.interconnect_bw)
         return self.cfg.step_overhead_s + base + moe_pen + comm
+
+
+@dataclasses.dataclass
+class SwapCostConfig:
+    """Priors for the swap-vs-recompute decision; every rate is an EMA
+    seed that measured observations replace within a few transfers."""
+
+    d2h_bw: float = 2.0e10        # device -> host bytes/s (pinned copies)
+    h2d_bw: float = 2.0e10        # host -> device bytes/s
+    swap_lat_s: float = 0.5e-3    # fixed per-transfer launch/sync latency
+    prefill_tps: float = 5.0e5    # chunked-prefill tokens/s seed
+    decode_step_s: float = 5.0e-3  # one decode dispatch seed
+    ema: float = 0.25             # observation weight
+
+
+class SwapCostModel:
+    """Measured swap-vs-recompute cost model for preemption decisions.
+
+    The classic trade: preempting a request either *recomputes* its
+    prefill later (compute-heavy; decode-phase victims additionally
+    replay each generated token as a full decode step) or *swaps* its KV
+    pages to the host tier and reloads them (I/O-heavy). Both sides are
+    priced from EMAs of what this engine actually measured — transfer
+    bandwidth from timed ``save_pages``/``load_pages`` callbacks, prefill
+    throughput and decode step time from timed dispatches — so the
+    per-request decision in :meth:`prefer_swap` tracks the hardware it
+    runs on instead of a datasheet.
+    """
+
+    def __init__(self, cfg: SwapCostConfig = SwapCostConfig()):
+        self.cfg = cfg
+        self.d2h_bw = cfg.d2h_bw
+        self.h2d_bw = cfg.h2d_bw
+        self.prefill_tps = cfg.prefill_tps
+        self.decode_step_s = cfg.decode_step_s
+        self.n_observed = 0
+
+    def _ema(self, old: float, new: float) -> float:
+        return (1.0 - self.cfg.ema) * old + self.cfg.ema * new
+
+    # ---- observations ----------------------------------------------------
+    def observe_transfer(self, nbytes: int, seconds: float,
+                         kind: str = "out") -> None:
+        if nbytes <= 0 or seconds <= 0:
+            return
+        rate = nbytes / max(seconds - self.cfg.swap_lat_s, 1e-9)
+        if kind == "out":
+            self.d2h_bw = self._ema(self.d2h_bw, rate)
+        else:
+            self.h2d_bw = self._ema(self.h2d_bw, rate)
+        self.n_observed += 1
+
+    def observe_prefill(self, tokens: int, seconds: float) -> None:
+        if tokens <= 0 or seconds <= 0:
+            return
+        self.prefill_tps = self._ema(self.prefill_tps, tokens / seconds)
+        self.n_observed += 1
+
+    def observe_decode(self, seconds: float) -> None:
+        if seconds <= 0:
+            return
+        self.decode_step_s = self._ema(self.decode_step_s, seconds)
+        self.n_observed += 1
+
+    # ---- pricing ---------------------------------------------------------
+    def transfer_time(self, nbytes: int, kind: str = "out") -> float:
+        bw = self.d2h_bw if kind == "out" else self.h2d_bw
+        return self.cfg.swap_lat_s + nbytes / max(bw, 1e-9)
+
+    def swap_round_trip(self, nbytes: int) -> float:
+        """Full cost of the swap choice: copy out now + copy back later."""
+        return (self.transfer_time(nbytes, "out")
+                + self.transfer_time(nbytes, "in"))
+
+    def recompute_time(self, prefill_tokens: int,
+                       decode_steps: int = 0) -> float:
+        """Cost of the recompute choice: re-prefill the prompt, then
+        replay each already-generated token as one decode dispatch."""
+        return (prefill_tokens / max(self.prefill_tps, 1e-9)
+                + decode_steps * self.decode_step_s)
+
+    def prefer_swap(self, prefill_tokens: int, decode_steps: int,
+                    nbytes: int) -> bool:
+        return self.swap_round_trip(nbytes) \
+            < self.recompute_time(prefill_tokens, decode_steps)

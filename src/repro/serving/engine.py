@@ -15,9 +15,11 @@ import numpy as np
 
 from repro.core.queue_policy import QueueConfig, order_queue, order_queue_fcfs
 from repro.core.traces import EngineTrace
-from repro.serving.costmodel import EngineCostModel
+from repro.serving.costmodel import (EngineCostModel, SwapCostConfig,
+                                     SwapCostModel)
 from repro.serving.engine_util import (PrefixSummaryShipper,
                                        select_preemption_victim)
+from repro.serving.kv_tier import HostKVTier, TieredSharedAllocator
 from repro.serving.kvcache import BlockPool
 from repro.serving.request import Request, RequestState
 from repro.serving.routing_sim import SourceExpertTraffic
@@ -44,19 +46,39 @@ class EngineConfig:
     # uses the SAME SharedPagedAllocator as the real paged engine, so
     # Algorithm 1 sees identical shared-aware kv_usage in sim and real
     prefix_sharing: bool = False
+    # preemption flavor when a HostKVTier is attached (same semantics as
+    # PagedEngineConfig.swap_policy): "recompute" | "swap" | "auto"
+    swap_policy: str = "recompute"
 
 
 class DPEngine:
     def __init__(self, engine_id: int, cfg: EngineConfig,
                  cost: Optional[EngineCostModel] = None,
                  traffic: Optional[SourceExpertTraffic] = None,
-                 top_k: int = 8):
+                 top_k: int = 8, tier: Optional[HostKVTier] = None):
         self.engine_id = engine_id
         self.cfg = cfg
         self.cost = cost or EngineCostModel()
         self.traffic = traffic
         self.top_k = top_k
-        if cfg.prefix_sharing:
+        self.tier = tier
+        self.swap_cost: Optional[SwapCostModel] = None
+        if tier is not None:
+            # same tier class as the real plane, accounting-only payloads
+            # (save/load callbacks None). Byte accounting and the swap
+            # cost model both come from the roofline constants, so the
+            # sim prices swap-vs-recompute with the economics the paper's
+            # testbed would measure.
+            if tier.page_nbytes == 0:
+                tier.page_nbytes = int(cfg.kv_block
+                                       * self.cost.cfg.kv_bytes_per_token)
+            self.swap_cost = SwapCostModel(SwapCostConfig(
+                prefill_tps=self.cost.recompute_tokens_equivalent(1.0),
+                decode_step_s=self.cost.decode_time(1, 0)))
+            self.pool = TieredSharedAllocator(
+                max(cfg.kv_tokens // cfg.kv_block, 1), cfg.kv_block,
+                tier=tier, archive_prefixes=cfg.prefix_sharing)
+        elif cfg.prefix_sharing:
             from repro.serving.paged import SharedPagedAllocator
             self.pool = SharedPagedAllocator(
                 max(cfg.kv_tokens // cfg.kv_block, 1), cfg.kv_block)
@@ -80,10 +102,14 @@ class DPEngine:
                           lanes_per_dispatch=cfg.max_prefill_lanes,
                           sharing=cfg.prefix_sharing,
                           decode_reserve_extra=1,
-                          prefill_preempt=cfg.prefix_sharing),
+                          prefill_preempt=(cfg.prefix_sharing
+                                           or tier is not None),
+                          swap_policy=cfg.swap_policy),
             self.pool, self,
             order_waiting=self._order_waiting,
-            preempt_one=self._preempt_one)
+            preempt_one=self._preempt_one,
+            swap_cost=self.swap_cost)
+        self._swap_in_bytes_window = 0.0
         # backend pressure inputs, refreshed by the coordinator each window
         self.moe_imbalance: float = 1.0
         self.remote_frac: float = 0.0
@@ -154,11 +180,26 @@ class DPEngine:
         n_prefill = plan.prefill_tokens
         n_decode = len(decode_reqs)
         ctx = sum(r.context_len for r in decode_reqs)
+
+        # tier transfers decided this step are priced into the step time
+        # (the sim's analogue of the real plane's synchronous copies)
+        swap_time = 0.0
+        if self.swap_cost is not None:
+            swap_time = sum(self.swap_cost.transfer_time(rec.nbytes, "out")
+                            for rec in plan.swap_out) \
+                + sum(self.swap_cost.transfer_time(rec.nbytes, "in")
+                      for rec in plan.swap_in)
+            self._swap_in_bytes_window += sum(rec.nbytes
+                                              for rec in plan.swap_in)
         if n_prefill == 0 and n_decode == 0:
+            if swap_time > 0.0:
+                self.busy_time += swap_time
+                return swap_time, None, {"swap_time": swap_time}
             return 0.0, None, {"idle": True}
 
         dur = self.cost.step_time(n_prefill, n_decode, ctx,
-                                  self.moe_imbalance, self.remote_frac)
+                                  self.moe_imbalance, self.remote_frac) \
+            + swap_time
 
         # ---- apply step effects
         for lane in plan.prefill_lanes:
@@ -218,6 +259,8 @@ class DPEngine:
     # ---- trace report -----------------------------------------------------
     def trace(self, now: float, *,
               full_prefix_summary: bool = False) -> EngineTrace:
+        swap_in_bytes = self._swap_in_bytes_window
+        self._swap_in_bytes_window = 0.0
         return EngineTrace(
             engine_id=self.engine_id,
             remaining_prefill_tokens=float(
@@ -229,6 +272,8 @@ class DPEngine:
             n_running=len(self.running),
             n_waiting=len(self.waiting),
             n_stalled=self._stalled_last,
+            swapped_tokens=float(getattr(self.pool, "swapped_tokens", 0)),
+            swap_in_bytes=swap_in_bytes,
             # same prefix-affinity digest as the real paged engine, off
             # the same allocator class — sim/real dispatch signals agree
             # (full on first emit / resync, a delta otherwise)

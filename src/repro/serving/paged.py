@@ -295,6 +295,21 @@ class SharedPagedAllocator(PagedBlockAllocator):
         self.free(req_id)
 
     # ---- prefix sharing --------------------------------------------------
+    def _attach_slot(self, node: _RadixNode) -> Optional[int]:
+        """Take one admission-match reference on ``node``'s page, reviving
+        it from the reclaimable cache if needed, and return the physical
+        page id. Subclass hook: the tiered allocator overrides this to
+        rematerialize pages archived to the host tier, returning ``None``
+        when no device page can back the slot (the match truncates)."""
+        p = node.page
+        if p in self._cached:                 # revive a reclaimable page
+            del self._cached[p]
+            self.refcount[p] = 1
+            self.free_blocks -= 1
+        else:
+            self.refcount[p] += 1
+        return p
+
     def match_prefix(self, req_id: int, tokens: Sequence) -> int:
         """Attach the longest cached *token* prefix of ``tokens`` to
         ``req_id``'s block table: walk the radix tree, keep the deepest
@@ -307,12 +322,12 @@ class SharedPagedAllocator(PagedBlockAllocator):
         if self.tables.get(req_id):
             return 0
         node, d = self._root, 0
-        slot_page: Dict[int, int] = {}
+        slot_node: Dict[int, _RadixNode] = {}
         while d < len(tokens):
             child, cp = self._best_child(node, tokens, d)
             if child is None or cp == 0:
                 break
-            slot_page[child.depth // self.block_size] = child.page
+            slot_node[child.depth // self.block_size] = child
             if child.page in self._cached:        # touch LRU recency
                 self._cached.move_to_end(child.page)
             d = child.depth + cp
@@ -321,14 +336,19 @@ class SharedPagedAllocator(PagedBlockAllocator):
             node = child
         if d == 0:
             return 0
-        table = [slot_page[k] for k in range((d - 1) // self.block_size + 1)]
-        for p in table:
-            if p in self._cached:                 # revive a reclaimable page
-                del self._cached[p]
-                self.refcount[p] = 1
-                self.free_blocks -= 1
-            else:
-                self.refcount[p] += 1
+        # attach slot by slot, in order, so a subclass that must source a
+        # physical page per slot (the tiered allocator rematerializing an
+        # archived page) can truncate the match to a page-aligned prefix
+        # when the pool cannot back a deeper slot
+        table: List[int] = []
+        for s in range((d - 1) // self.block_size + 1):
+            p = self._attach_slot(slot_node[s])
+            if p is None:
+                d = s * self.block_size
+                break
+            table.append(p)
+        if d == 0:
+            return 0
         self.tables[req_id] = table
         self._held[req_id] = len(table)
         self._matched[req_id] = (len(table), d)   # release_match rollback

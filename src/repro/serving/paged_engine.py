@@ -18,6 +18,7 @@ argument, so N engines cost one compile per entry point.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -28,9 +29,11 @@ from repro.core.queue_policy import QueueConfig, order_queue
 from repro.core.traces import EngineTrace
 from repro.models import moe as moe_mod
 from repro.models import transformer as tfm
+from repro.serving.costmodel import SwapCostModel
 from repro.serving.engine_util import (PrefixSummaryShipper,
                                        drain_window_stats, pin_dispatch_mode,
                                        select_preemption_victim)
+from repro.serving.kv_tier import HostKVTier, TieredSharedAllocator
 from repro.serving.paged import PagedBlockAllocator, SharedPagedAllocator
 from repro.serving.request import Request, RequestState
 from repro.serving.step_plan import (PlannerConfig, PrefillLane,
@@ -63,6 +66,13 @@ class PagedEngineConfig:
     register_decode_tokens: bool = True
     min_register_len: int = 0         # skip finish-time registration below
     register_ttl_s: float = 0.0       # 0 = registrations never expire
+    # device page dtype: "auto" keeps the model dtype; "int8" stores
+    # quantized pages + per-row fp32 scales (kernels/kv_pack) — same pool
+    # bytes hold ~2*hd/(hd+4) times the tokens, dequant on read
+    kv_dtype: str = "auto"
+    # preemption flavor when a HostKVTier backs the pool: "recompute" |
+    # "swap" | "auto" (measured SwapCostModel decides per victim)
+    swap_policy: str = "recompute"
 
     @property
     def max_len(self) -> int:
@@ -143,7 +153,8 @@ class PagedModelRunner:
 
     def init_pages(self):
         return tfm.init_paged_cache(self.cfg, self.ecfg.n_pages + 1,
-                                    self.ecfg.page_size)
+                                    self.ecfg.page_size,
+                                    kv_dtype=self.ecfg.kv_dtype)
 
 
 class PagedRealEngine:
@@ -153,7 +164,8 @@ class PagedRealEngine:
                  ecfg: Optional[PagedEngineConfig] = None, *,
                  runner: Optional[PagedModelRunner] = None,
                  n_sources: int = 2,
-                 ragged_dispatch: Optional[bool] = None):
+                 ragged_dispatch: Optional[bool] = None,
+                 tier: Optional[HostKVTier] = None):
         self.engine_id = engine_id
         self.cfg = cfg
         self.ecfg = ecfg or PagedEngineConfig()
@@ -170,13 +182,18 @@ class PagedRealEngine:
         assert self.ecfg.max_prefill_lanes \
             <= self.runner.ecfg.lane_buckets[-1], \
             "engine fuses more prefill lanes than the runner's lane buckets"
+        assert self.ecfg.kv_dtype == self.runner.ecfg.kv_dtype, \
+            "engine/runner kv_dtype mismatch"
         self.sharing = self.ecfg.prefix_sharing
-        self.pool = (SharedPagedAllocator(self.ecfg.n_pages,
-                                          self.ecfg.page_size)
-                     if self.sharing else
-                     PagedBlockAllocator(self.ecfg.n_pages,
-                                         self.ecfg.page_size))
+        self.tier = tier
+        self.pool = self._make_pool()
         self.pages = self.runner.init_pages()
+        if tier is not None and tier.page_nbytes == 0:
+            tier.page_nbytes = tfm.paged_cache_page_nbytes(self.pages)
+        # measured swap-vs-recompute pricing (tiered engines only): the
+        # save/load callbacks and the data-plane dispatches feed it
+        self.swap_cost = SwapCostModel() if tier is not None else None
+        self._swap_in_bytes_window = 0.0
         self._summary_shipper = PrefixSummaryShipper(self.pool) \
             if self.sharing else None
         self.prefix_hit_tokens = 0        # prefill tokens skipped via cache
@@ -189,11 +206,13 @@ class PagedRealEngine:
                           max_running=self.ecfg.max_batch,
                           chunk_cap=self.ecfg.chunk_buckets[-1],
                           lanes_per_dispatch=self.ecfg.max_prefill_lanes,
-                          sharing=self.sharing),
+                          sharing=self.sharing,
+                          swap_policy=self.ecfg.swap_policy),
             self.pool, self,
             order_waiting=lambda w, now: order_queue(w, now, self.qcfg),
             preempt_one=self._preempt_one,
-            apply_copies=self._apply_cow)
+            apply_copies=self._apply_cow,
+            swap_cost=self.swap_cost)
         self.placement = np.asarray(tfm.identity_placement(cfg))
         self.moe_pressure: float = 0.0
         self.stats_log: List[Dict] = []
@@ -212,8 +231,49 @@ class PagedRealEngine:
         self.prefill_dispatches = 0       # fused prefill data-plane calls
         self.prefill_lanes_total = 0      # real lanes across those calls
 
+    # ---- pool / tier plumbing --------------------------------------------
+    def _make_pool(self):
+        if self.tier is not None:
+            return TieredSharedAllocator(
+                self.ecfg.n_pages, self.ecfg.page_size, tier=self.tier,
+                save_pages=self._save_pages, load_pages=self._load_pages,
+                archive_prefixes=self.sharing)
+        if self.sharing:
+            return SharedPagedAllocator(self.ecfg.n_pages,
+                                        self.ecfg.page_size)
+        return PagedBlockAllocator(self.ecfg.n_pages, self.ecfg.page_size)
+
+    def _save_pages(self, page_ids: List[int]):
+        """Device -> host copy of whole page rows (the tier's payload),
+        timed into the swap cost model's d2h bandwidth estimate."""
+        t0 = time.perf_counter()
+        payload = jax.tree.map(np.asarray,
+                               tfm.gather_pages(self.pages, page_ids))
+        if self.swap_cost is not None:
+            self.swap_cost.observe_transfer(
+                len(page_ids) * self.tier.page_nbytes,
+                time.perf_counter() - t0, kind="out")
+        return payload
+
+    def _load_pages(self, payload, page_ids: List[int]) -> None:
+        """Host -> device restore into freshly allocated page rows."""
+        t0 = time.perf_counter()
+        self.pages = tfm.scatter_pages(self.pages, payload, page_ids)
+        jax.block_until_ready(self.pages)
+        if self.swap_cost is not None:
+            self.swap_cost.observe_transfer(
+                len(page_ids) * self.tier.page_nbytes,
+                time.perf_counter() - t0, kind="in")
+
     # ---- admission -------------------------------------------------------
     def enqueue(self, req: Request, now: float) -> None:
+        if (req.prefill_done > 0 or req.generated > 0) and not (
+                self.tier is not None
+                and self.tier.holds_request(req.req_id)):
+            # progress without tier backing (mixed fleet, or a foreign
+            # tier): fold emitted tokens into a resume prompt instead of
+            # pretending KV this engine cannot restore exists
+            req.export_for_resume()
         req.engine_id = self.engine_id
         req.dispatch_time = now
         # the full trajectory (prompt + every decode write) must fit both
@@ -240,11 +300,12 @@ class PagedRealEngine:
         every block table is gone). Lifetime stat counters carry over so
         cluster telemetry stays cumulative across restarts."""
         old = self.pool
-        self.pool = (SharedPagedAllocator(self.ecfg.n_pages,
-                                          self.ecfg.page_size)
-                     if self.sharing else
-                     PagedBlockAllocator(self.ecfg.n_pages,
-                                         self.ecfg.page_size))
+        if isinstance(old, TieredSharedAllocator):
+            # the radix index dies with the pool: drop its parked prefix
+            # pages from the tier (request-level entries survive — their
+            # payloads are host copies any tier-sharing engine can restore)
+            old.drop_index()
+        self.pool = self._make_pool()
         for k, v in vars(old).items():
             if k.startswith("stat_"):
                 setattr(self.pool, k, v)
@@ -266,7 +327,15 @@ class PagedRealEngine:
         self.running.clear()
         self.waiting.clear()
         for r in exported:
-            r.export_for_resume()
+            if self.tier is not None and self.tier.holds_request(r.req_id):
+                # swapped-out victim: its pages live in host memory, which
+                # survives the crash — keep prefill/decode progress; any
+                # engine sharing the tier swaps it back in at admission
+                r.state = RequestState.WAITING
+                r.engine_id = -1
+                r.n_recoveries += 1
+            else:
+                r.export_for_resume()
         if not self.dead:
             self.n_failures += 1
             self._reset_pool()
@@ -284,6 +353,27 @@ class PagedRealEngine:
         self.waiting.clear()
         for r in exported:
             r.export_for_resume()
+        if self.tier is not None:
+            # swap-based drain: residents' pages move to the host tier and
+            # the requests export WITH their progress — re-dispatch costs a
+            # transfer instead of a re-prefill (recovery_recompute_tokens
+            # stays ~0). Residents the tier cannot take drain classically
+            # (keep running here until finished).
+            for r in list(self.running):
+                written = written_kv_len(r)
+                rec = self.pool.swap_out_request(r.req_id, written) \
+                    if written > 0 else None
+                if rec is None and written > 0:
+                    continue               # tier full: classic drain
+                self.running.remove(r)
+                if rec is None:            # nothing written: free restart
+                    self.pool.free(r.req_id)
+                    r.export_for_resume()
+                else:
+                    r.state = RequestState.WAITING
+                    r.engine_id = -1
+                    r.n_recoveries += 1
+                exported.append(r)
         return exported
 
     def release(self) -> None:
@@ -364,6 +454,8 @@ class PagedRealEngine:
         self.prefix_hit_tokens += plan.prefix_hit_tokens
         self._stalled_last = plan.n_stalled
         self.n_stalled_total += plan.n_stalled
+        self._swap_in_bytes_window += sum(rec.nbytes
+                                          for rec in plan.swap_in)
 
         finished: List[Request] = []
         for group in plan.prefill_groups:
@@ -397,9 +489,14 @@ class PagedRealEngine:
                  "chunk_lens": jnp.asarray(lens)}
         bt = jnp.asarray(self.pool.block_table_array(
             rids, self.ecfg.max_blocks_per_req))
+        t0 = time.perf_counter()
         logits, self.pages, stats = self.runner.prefill_chunk(
             batch, self.pages, bt, jnp.asarray(self.placement),
             jnp.full((B,), self.engine_id, jnp.int32))
+        if self.swap_cost is not None:
+            jax.block_until_ready(logits)
+            self.swap_cost.observe_prefill(sum(l.chunk for l in group),
+                                           time.perf_counter() - t0)
         self.prefill_dispatches += 1
         self.prefill_lanes_total += len(group)
         if stats is not None:
@@ -442,12 +539,15 @@ class PagedRealEngine:
             active[i] = True
             rids[i] = r.req_id
         bt = self.pool.block_table_array(rids, self.ecfg.max_blocks_per_req)
+        t0 = time.perf_counter()
         logits, self.pages, stats = self.runner.decode(
             jnp.asarray(tokens), self.pages, jnp.asarray(lengths),
             jnp.asarray(bt), jnp.asarray(active),
             jnp.asarray(self.placement),
             jnp.full((B,), self.engine_id, jnp.int32))
-        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))   # sync point
+        if self.swap_cost is not None:
+            self.swap_cost.observe_decode(time.perf_counter() - t0)
         if stats is not None:
             self.stats_log.append(jax.tree.map(np.asarray, stats))
         finished = []
@@ -463,6 +563,8 @@ class PagedRealEngine:
     # ---- control-plane surface -------------------------------------------
     def trace(self, now: float, *,
               full_prefix_summary: bool = False) -> EngineTrace:
+        swap_in_bytes = self._swap_in_bytes_window
+        self._swap_in_bytes_window = 0.0
         return EngineTrace(
             engine_id=self.engine_id,
             remaining_prefill_tokens=float(
@@ -474,6 +576,8 @@ class PagedRealEngine:
             n_running=len(self.running),
             n_waiting=len(self.waiting),
             n_stalled=self._stalled_last,
+            swapped_tokens=float(getattr(self.pool, "swapped_tokens", 0)),
+            swap_in_bytes=swap_in_bytes,
             # radix-cache digest (the scheduler's prefix-affinity signal):
             # full on first emit / requested resync, a delta otherwise
             prefix_summary=self._summary_shipper.emit(

@@ -168,6 +168,7 @@ def serve_real_cluster(requests: List[Request], engines, *,
     shed = 0
     quarantined = 0
     drained_engines: List[int] = []
+    drain_swapped: Dict[int, int] = {}  # engine -> residents exported via tier
     stall_streak = 0
 
     def quarantine(r: Request, reason: str) -> None:
@@ -176,6 +177,12 @@ def serve_real_cluster(requests: List[Request], engines, *,
         r.state = RequestState.FINISHED
         r.finish_time = now
         quarantined += 1
+        # a quarantined request never re-admits: release any KV pages it
+        # parked in a host tier, or the tier leaks host capacity
+        for e in engines:
+            pool = getattr(e, "pool", None)
+            if pool is not None and hasattr(pool, "drop_swapped"):
+                pool.drop_swapped(r.req_id)
 
     def on_engine_down(eid: int) -> int:
         """Health-monitor callback: collect the dead engine's exported
@@ -258,7 +265,13 @@ def serve_real_cluster(requests: List[Request], engines, *,
                 e = by_id[eid]
                 if not is_dead(e) and not getattr(e, "draining", False):
                     sched.exclude(eid)
-                    orphans.extend(e.drain(now))
+                    moved = e.drain(now)
+                    tier = getattr(e, "tier", None)
+                    if tier is not None:
+                        drain_swapped[eid] = sum(
+                            1 for r in moved
+                            if tier.holds_request(r.req_id))
+                    orphans.extend(moved)
             for e in engines:
                 if hasattr(e, "pool"):
                     e.pool.force_alloc_fail = injector.alloc_fail(
@@ -270,7 +283,8 @@ def serve_real_cluster(requests: List[Request], engines, *,
                 e.release()
                 drained_engines.append(e.engine_id)
                 if e.engine_id in table.engine_ids:
-                    ec.scale_down(e.engine_id, now, drain=lambda _: 0)
+                    ec.scale_down(e.engine_id, now, drain=lambda _: 0,
+                                  swapped=drain_swapped.pop(e.engine_id, 0))
                 mon.unhealthy.discard(e.engine_id)
 
         # ---- 2. dispatch arrivals due by now (Algorithm 1 against live
@@ -327,7 +341,12 @@ def serve_real_cluster(requests: List[Request], engines, *,
                 by_id[eid].enqueue(r, now)
                 if not r.error:            # target may reject at enqueue
                     recovered += 1
-                    recovery_recompute_tokens += r.prompt_len
+                    # tokens this request will prefill again: tier-backed
+                    # exports keep prefill_done (swap-in re-attaches their
+                    # pages, ~0 recompute); resume exports reset it at
+                    # enqueue, so the folded prompt counts in full
+                    recovery_recompute_tokens += max(
+                        r.prompt_len - r.prefill_done, 0)
             orphans = still
 
         # ---- 4. step the data planes + collect traces --------------------
@@ -428,6 +447,27 @@ def serve_real_cluster(requests: List[Request], engines, *,
         "recovered_requests": recovered,
         "recovery_recompute_tokens": recovery_recompute_tokens,
         "drained_engines": drained_engines,
+        # ---- KV tier telemetry (kv_tier.py; zeros when no tier). Engines
+        # may share one HostKVTier, so tier-level byte/page stats dedupe by
+        # object identity; the per-allocator swap counters sum per engine.
+        "swapped_tokens": sum(
+            t.swapped_tokens for t in {
+                id(t): t for t in (getattr(e, "tier", None) for e in engines)
+                if t is not None}.values()),
+        "swap_out_bytes": sum(
+            t.stat_out_bytes for t in {
+                id(t): t for t in (getattr(e, "tier", None) for e in engines)
+                if t is not None}.values()),
+        "swap_in_bytes": sum(
+            t.stat_in_bytes for t in {
+                id(t): t for t in (getattr(e, "tier", None) for e in engines)
+                if t is not None}.values()),
+        "swapped_out_reqs": sum(
+            getattr(getattr(e, "pool", None), "stat_swapped_out_reqs", 0)
+            for e in engines),
+        "swapped_in_reqs": sum(
+            getattr(getattr(e, "pool", None), "stat_swapped_in_reqs", 0)
+            for e in engines),
         "health_events": list(mon.events),
         "elastic_events": list(ec.log),
         # prefix-sharing telemetry (0 when sharing is off). Deliberately

@@ -39,7 +39,9 @@ import dataclasses
 from typing import Callable, List, Optional, Tuple
 
 from repro.serving.engine_util import (grow_with_cow, match_prefix_on_admit,
-                                       release_prefix_match)
+                                       release_prefix_match,
+                                       select_preemption_victim)
+from repro.serving.kv_tier import SwapRecord
 from repro.serving.request import Request, RequestState
 
 
@@ -59,6 +61,12 @@ class PlannerConfig:
     # it admitted prefills deadlock waiting for each other's next chunk);
     # the simulator's non-sharing path historically skips instead
     prefill_preempt: bool = True
+    # preemption flavor over a tiered pool (kv_tier.py): "recompute"
+    # (classic — victims lose their KV and re-prefill), "swap" (victims'
+    # pages always move to the host tier, restored at re-admission), or
+    # "auto" (the measured SwapCostModel picks per victim). Ignored when
+    # the pool has no tier behind it.
+    swap_policy: str = "recompute"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,6 +87,10 @@ class StepPlan:
     n_stalled: int = 0
     n_admitted: int = 0
     prefix_hit_tokens: int = 0        # admission-time cache hits (sharing)
+    # tier transfers decided (and executed) while planning this step —
+    # the data plane prices/report them, it does not re-run them
+    swap_out: List[SwapRecord] = dataclasses.field(default_factory=list)
+    swap_in: List[SwapRecord] = dataclasses.field(default_factory=list)
 
     @property
     def prefill_lanes(self) -> List[PrefillLane]:
@@ -116,13 +128,62 @@ class StepPlanner:
     def __init__(self, cfg: PlannerConfig, pool, host, *,
                  order_waiting: Callable,
                  preempt_one: Callable[[Optional[Request]], bool],
-                 apply_copies: Optional[Callable] = None):
+                 apply_copies: Optional[Callable] = None,
+                 swap_cost=None,
+                 select_victim: Optional[Callable] = None):
         self.cfg = cfg
         self.pool = pool
         self.host = host
         self._order_waiting = order_waiting
         self._preempt_one = preempt_one
         self._apply_copies = apply_copies
+        # swap-vs-recompute machinery (tiered pools only): the cost model
+        # prices both sides under "auto"; the victim selector defaults to
+        # the shared recompute-mode policy so swap and recompute evict the
+        # same request — only its KV's fate differs
+        self._swap_cost = swap_cost
+        self._select_victim = select_victim or \
+            (lambda protect: select_preemption_victim(self.host.running,
+                                                      protect))
+        self._swap_out_recs: List[SwapRecord] = []
+        self._swap_in_recs: List[SwapRecord] = []
+
+    # ---- preemption: swap-vs-recompute -----------------------------------
+    def _try_swap_out(self, protect: Optional[Request]) -> bool:
+        """Preempt by swapping the victim's pages to the host tier,
+        keeping its prefill/decode progress. False falls back to classic
+        recompute preemption (policy says so, no tier, tier full, or the
+        victim has nothing worth saving)."""
+        pool = self.pool
+        if self.cfg.swap_policy == "recompute" \
+                or not hasattr(pool, "swap_out_request"):
+            return False
+        victim = self._select_victim(protect)
+        if victim is None:
+            return False
+        tokens = written_kv_len(victim)
+        if tokens <= 0:
+            return False              # nothing written: recompute is free
+        if self.cfg.swap_policy == "auto" and self._swap_cost is not None:
+            nbytes = len(pool.table_of(victim.req_id)) \
+                * pool.tier.page_nbytes
+            if not self._swap_cost.prefer_swap(
+                    victim.prefill_done, max(victim.generated - 1, 0),
+                    nbytes):
+                return False
+        rec = pool.swap_out_request(victim.req_id, tokens)
+        if rec is None:
+            return False
+        host = self.host
+        host.running.remove(victim)
+        victim.n_preemptions += 1
+        victim.state = RequestState.PREEMPTED
+        host.waiting.append(victim)
+        self._swap_out_recs.append(rec)
+        return True
+
+    def _preempt(self, protect: Optional[Request]) -> bool:
+        return self._try_swap_out(protect) or self._preempt_one(protect)
 
     # ---- admission -------------------------------------------------------
     def _admit(self, now: float) -> Tuple[int, int]:
@@ -130,9 +191,21 @@ class StepPlanner:
         host.waiting = self._order_waiting(host.waiting, now)
         admitted: List[Request] = []
         hit_tokens = 0
+        tiered = hasattr(self.pool, "swap_in_request")
         for r in host.waiting:
             if len(host.running) + len(admitted) >= self.cfg.max_running:
                 break
+            if tiered and self.pool.holds_swapped(r.req_id):
+                # swapped-out victim: restore its pages from the tier in
+                # place of match/allocate — its KV already exists, so
+                # re-admission costs a transfer, not a recompute
+                rec = self.pool.swap_in_request(r.req_id)
+                if rec is None:
+                    break              # pool cannot back it yet: no bypass
+                self._swap_in_recs.append(rec)
+                r.state = RequestState.RUNNING
+                admitted.append(r)
+                continue
             matched = match_prefix_on_admit(self.pool, r) \
                 if self.cfg.sharing else 0
             first = min(r.remaining_prefill, self.cfg.token_budget)
@@ -155,11 +228,12 @@ class StepPlanner:
         return grow_with_cow(
             self.pool, r, need_tokens, write_lo, write_hi,
             sharing=self.cfg.sharing,
-            preempt_one=lambda req: self._preempt_one(req),
+            preempt_one=lambda req: self._preempt(req),
             apply_copies=self._apply_copies)
 
     # ---- the step plan ---------------------------------------------------
     def plan(self, now: float) -> StepPlan:
+        self._swap_out_recs, self._swap_in_recs = [], []
         n_admitted, hit_tokens = self._admit(now)
         running = self.host.running
 
@@ -213,7 +287,9 @@ class StepPlanner:
         groups = [lanes[i:i + g] for i in range(0, len(lanes), g)]
         return StepPlan(decode=decode, prefill_groups=groups,
                         n_stalled=stalled, n_admitted=n_admitted,
-                        prefix_hit_tokens=hit_tokens)
+                        prefix_hit_tokens=hit_tokens,
+                        swap_out=self._swap_out_recs,
+                        swap_in=self._swap_in_recs)
 
 
 def check_plan_invariants(plan: StepPlan, cfg: PlannerConfig, pool,
@@ -248,5 +324,12 @@ def check_plan_invariants(plan: StepPlan, cfg: PlannerConfig, pool,
         held = pool.held_tokens(r.req_id)
         assert held >= l.start + l.chunk, \
             f"prefill write not backed for {r.req_id}: {held} tokens held"
+    for rec in plan.swap_out:
+        assert rec.kind == "out" and rec.n_pages >= 1 and rec.tokens >= 1
+        assert rec.req_id not in seen, "swapped-out request also planned"
+        assert pool.held_tokens(rec.req_id) == 0, \
+            "swapped-out request still holds device pages"
+    for rec in plan.swap_in:
+        assert rec.kind == "in" and rec.n_pages >= 1
     if hasattr(pool, "check_invariants"):
         pool.check_invariants()
