@@ -1,0 +1,174 @@
+"""Mixed fused-step bench (BENCH_mixed_step).
+
+With ``mixed_steps`` on, the StepPlanner folds the step's decode lanes
+(1-token prefill-like lanes) into the chunked-prefill dispatch groups,
+so a steady decode+prefill overlap that costs the split path two model
+calls per step (one static-batch decode call + one prefill call) runs
+as ONE cost-aware (B, S)-bucketed ``mixed_step_paged`` call.
+
+Serves the SAME staggered-arrival stream twice through one jitted
+``PagedModelRunner``:
+
+* ``split`` — ``mixed_steps=False``: the PR 5 plan/execute baseline,
+  decode lanes padded to the static ``max_batch`` shape every step plus
+  per-group prefill dispatches;
+* ``mixed`` — ``mixed_steps=True``: the grouper packs lanes by similar
+  chunk size (decode lanes are chunk-1) under the priced dispatch
+  overhead, padding each group to its own (lane, chunk) bucket.
+
+Asserts (and records in the JSON): **bit-exact** outputs and identical
+finish times across the two runs, **>= 1.5x fewer total model
+dispatches per served token** for the mixed run (decode dispatches drop
+to zero), and **lower (B, S) padding waste** than the split baseline,
+measured by the runner's padding-waste counters. Emits
+``experiments/bench/BENCH_mixed_step.json``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from benchmarks.common import FAST, emit, save_json
+
+
+def _requests(cfg, n, seed=42):
+    from repro.serving import Request
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        # short prompts decoding for a handful of steps, one arrival per
+        # ~1.5 steps: every step carries a few decode lanes plus a small
+        # prefill chunk — the overlap regime mixed fusion exists for
+        plen = int(rng.integers(6, 11))
+        reqs.append(Request(
+            req_id=i, prompt_len=plen,
+            max_new_tokens=int(rng.integers(4, 7)),
+            arrival_time=0.015 * i,
+            prompt_tokens=rng.integers(0, cfg.vocab_size, plen).tolist()))
+    return reqs
+
+
+def _serve_one(cfg, params, runner, ecfg, n_requests, seed):
+    from repro.serving import PagedRealEngine, RequestState
+    e = PagedRealEngine(0, cfg, params, ecfg, runner=runner, n_sources=2)
+    reqs = _requests(cfg, n_requests, seed=seed)
+    pending = sorted(reqs, key=lambda r: r.arrival_time)
+    waste0 = runner.padding_waste_tokens
+    padded0 = runner.padded_tokens_total
+    t0 = time.perf_counter()
+    now = 0.0
+    while pending or e.has_work:
+        while pending and pending[0].arrival_time <= now:
+            e.enqueue(pending.pop(0), now)
+        e.step(now)
+        now += 0.01
+    wall = time.perf_counter() - t0
+    e.pool.check_invariants()
+    assert e.pool.usage == 0.0
+    assert all(r.state is RequestState.FINISHED and not r.error
+               for r in reqs)
+    served = e.total_prefill_tokens + e.total_decode_tokens
+    dispatches = e.prefill_dispatches + e.decode_dispatches
+    return {
+        "served": len(reqs),
+        "wall_s": wall,
+        "steps": e.step_count,
+        "served_tokens": served,
+        "prefill_dispatches": e.prefill_dispatches,
+        "decode_dispatches": e.decode_dispatches,
+        "total_dispatches": dispatches,
+        "dispatches_per_token": dispatches / max(served, 1),
+        "padding_waste_tokens": runner.padding_waste_tokens - waste0,
+        "padded_tokens_total": runner.padded_tokens_total - padded0,
+        "outputs": {r.req_id: list(r.output_tokens or []) for r in reqs},
+        "finish": {r.req_id: r.finish_time for r in reqs},
+    }
+
+
+def run() -> None:
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.configs.base import reduced
+    from repro.models import build_model
+    from repro.serving import PagedEngineConfig, PagedModelRunner
+
+    cfg = reduced(get_smoke_config("qwen3-moe-30b-a3b"), n_layers=2)
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    # small chunk buckets keep fused S near the decode lanes' chunk of 1;
+    # overhead 48 prices a dispatch (launch + MoE weight streaming) high
+    # enough that the grouper fuses the overlap instead of splitting it
+    mixed_cfg = PagedEngineConfig(
+        page_size=8, n_pages=64, max_blocks_per_req=8, max_batch=12,
+        token_budget=12, chunk_buckets=(2, 4),
+        lane_buckets=(1, 2, 3, 4, 6, 8), max_prefill_lanes=8,
+        dispatch_overhead_tokens=48, mixed_steps=True,
+        attn_backend="xla")
+    split_cfg = dataclasses.replace(mixed_cfg, mixed_steps=False)
+    runner = PagedModelRunner(cfg, params, mixed_cfg, n_sources=2)
+    n_req = 10 if FAST else 14
+
+    # warm both modes' jit shapes with the exact timed workload (the
+    # mixed grouper's (B, S) shapes depend on the arrival interleaving,
+    # so a smaller warm-up would leave compiles in the timed runs)
+    t0 = time.perf_counter()
+    _serve_one(cfg, params, runner, mixed_cfg, n_req, seed=42)
+    _serve_one(cfg, params, runner, split_cfg, n_req, seed=42)
+    compile_s = time.perf_counter() - t0
+
+    r_mix = _serve_one(cfg, params, runner, mixed_cfg, n_req, seed=42)
+    r_spl = _serve_one(cfg, params, runner, split_cfg, n_req, seed=42)
+
+    bit_exact = r_mix["outputs"] == r_spl["outputs"] \
+        and r_mix["finish"] == r_spl["finish"]
+    assert bit_exact, "mixed fusion changed served tokens or finish times"
+    assert r_mix["served_tokens"] == r_spl["served_tokens"]
+    assert r_mix["decode_dispatches"] == 0     # decode rode the fused calls
+    dispatch_reduction = r_spl["dispatches_per_token"] \
+        / max(r_mix["dispatches_per_token"], 1e-9)
+    assert dispatch_reduction >= 1.5, \
+        f"expected >=1.5x fewer dispatches/token, got {dispatch_reduction:.2f}x"
+    assert r_mix["padding_waste_tokens"] < r_spl["padding_waste_tokens"], \
+        "cost-aware grouping should cut (B, S) padding waste below split"
+
+    emit("mixed_step_split", r_spl["wall_s"] * 1e6,
+         f"dispatches={r_spl['total_dispatches']} "
+         f"waste={r_spl['padding_waste_tokens']} steps={r_spl['steps']}")
+    emit("mixed_step_mixed", r_mix["wall_s"] * 1e6,
+         f"dispatches={r_mix['total_dispatches']} "
+         f"waste={r_mix['padding_waste_tokens']} steps={r_mix['steps']}")
+
+    for r in (r_mix, r_spl):
+        r.pop("outputs")
+        r.pop("finish")
+    payload = {
+        "config": {"model": cfg.name, "n_layers": cfg.n_layers,
+                   "page_size": mixed_cfg.page_size,
+                   "token_budget": mixed_cfg.token_budget,
+                   "max_batch": mixed_cfg.max_batch,
+                   "chunk_buckets": list(mixed_cfg.chunk_buckets),
+                   "lane_buckets": list(mixed_cfg.lane_buckets),
+                   "dispatch_overhead_tokens":
+                       mixed_cfg.dispatch_overhead_tokens,
+                   "n_requests": n_req,
+                   "backend": mixed_cfg.attn_backend},
+        "split": r_spl,
+        "mixed": r_mix,
+        "bit_exact": bit_exact,
+        "dispatch_reduction": dispatch_reduction,
+        "padding_waste_ratio": r_mix["padding_waste_tokens"]
+        / max(r_spl["padding_waste_tokens"], 1),
+        "wall_speedup": r_spl["wall_s"] / max(r_mix["wall_s"], 1e-9),
+        "compile_s": compile_s,
+    }
+    path = save_json("BENCH_mixed_step", payload)
+    emit("mixed_step_headline", 0.0,
+         f"dispatch_reduction={dispatch_reduction:.2f}x "
+         f"waste_ratio={payload['padding_waste_ratio']:.2f} "
+         f"bit_exact={bit_exact} "
+         f"wall_x={payload['wall_speedup']:.2f} json={path}")
+
+
+if __name__ == "__main__":
+    run()

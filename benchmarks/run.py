@@ -10,17 +10,20 @@ bench on reduced grids (CPU) and writes
 ``experiments/bench/BENCH_moe_dispatch.json`` +
 ``BENCH_paged_serving.json`` + ``BENCH_prefix_sharing.json`` +
 ``BENCH_prefix_affinity.json`` + ``BENCH_batched_prefill.json`` +
-``BENCH_fault_recovery.json`` + ``BENCH_kv_tier.json`` — the
-perf-trajectory tracking entry points for CI. The affinity bench asserts
-``affinity_hit_rate > 0`` and bit-exact outputs; the batched-prefill
-bench asserts bit-exact outputs with >= 2x fewer prefill dispatches; the
-fault-recovery bench kills an engine mid-run and asserts every request
-still completes bit-exact; the KV-tier bench asserts swapped pages
-round-trip bit-exact with zero re-prefill, the int8 page layout holds
->= 1.8x tokens at equal bytes, and the measured cost model beats both
-fixed preemption policies — so a regression in the radix cache, the
-affinity signal, the StepPlanner lane fusion, the crash-recovery path or
-the KV tier fails the smoke lane fast.
+``BENCH_mixed_step.json`` + ``BENCH_fault_recovery.json`` +
+``BENCH_kv_tier.json`` — the perf-trajectory tracking entry points for
+CI. The affinity bench asserts ``affinity_hit_rate > 0`` and bit-exact
+outputs; the batched-prefill bench asserts bit-exact outputs with >= 2x
+fewer prefill dispatches; the mixed-step bench asserts bit-exact
+outputs with >= 1.5x fewer total model dispatches per served token AND
+lower (B, S) padding waste than the split baseline; the fault-recovery
+bench kills an engine mid-run and asserts every request still completes
+bit-exact; the KV-tier bench asserts swapped pages round-trip bit-exact
+with zero re-prefill, the int8 page layout holds >= 1.8x tokens at
+equal bytes, and the measured cost model beats both fixed preemption
+policies — so a regression in the radix cache, the affinity signal, the
+StepPlanner lane fusion, the mixed fused steps, the crash-recovery path
+or the KV tier fails the smoke lane fast.
 """
 from __future__ import annotations
 
@@ -43,6 +46,7 @@ MODULES = [
     "benchmarks.fig_prefix_sharing",
     "benchmarks.fig_prefix_affinity",
     "benchmarks.fig_batched_prefill",
+    "benchmarks.fig_mixed_step",
     "benchmarks.fig_fault_recovery",
     "benchmarks.fig_kv_tier",
     "benchmarks.roofline_table",
@@ -53,6 +57,7 @@ SMOKE_MODULES = ["benchmarks.fig_ragged_dispatch",
                  "benchmarks.fig_prefix_sharing",
                  "benchmarks.fig_prefix_affinity",
                  "benchmarks.fig_batched_prefill",
+                 "benchmarks.fig_mixed_step",
                  "benchmarks.fig_fault_recovery",
                  "benchmarks.fig_kv_tier"]
 

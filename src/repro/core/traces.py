@@ -108,6 +108,10 @@ class EngineTrace:
     n_stalled: int = 0                      # decode lanes stalled last step:
                                             # KV growth failed even after
                                             # preemption (hard KV pressure)
+    swap_in_blocked: float = 0.0            # head-of-line swap-ins the pool
+                                            # could not back last step —
+                                            # tier pressure, distinct from
+                                            # an ordinary full-pool stall
     # tiered-KV signals (kv_tier.py; 0 when the engine has no tier):
     # tokens of this engine's requests parked in the host tier — state
     # that is NOT in kv_usage, which truthfully counts device-resident
@@ -203,6 +207,7 @@ class TraceTable:
                 "n_running": int(t.n_running),
                 "n_waiting": int(t.n_waiting),
                 "n_stalled": int(t.n_stalled),
+                "swap_in_blocked": float(t.swap_in_blocked),
                 "swapped_tokens": float(t.swapped_tokens),
                 "swap_in_bytes": float(t.swap_in_bytes),
                 "timestamp": float(t.timestamp),

@@ -332,6 +332,18 @@ def _paged_attention(cfg, q, k, v, positions, cache, mode, paged):
     out = flash_attention(q, kd, vd, q_pos=positions, k_pos=kpos,
                           causal=True, window=0,
                           softcap_val=cfg.attn_logit_softcap)
+    dm = paged.get("decode_mask")
+    if dm is not None:
+        # mixed fused step: rows flagged decode are 1-token lanes whose
+        # attention must be bit-exact with decode_step_paged. The prefill
+        # flash path casts softmax weights to the KV dtype before the
+        # value product while the decode kernel keeps them f32, so the
+        # two differ in low bits — recompute those rows' position-0
+        # output through the decode kernel and select per row.
+        dec = paged_decode(q[:, 0], ck, cv, bt, ctx,
+                           k_scales=cks, v_scales=cvs,
+                           backend=backend, interpret=interpret)
+        out = out.at[:, 0].set(jnp.where(dm[:, None, None], dec, out[:, 0]))
     return out, new_cache
 
 
@@ -684,6 +696,7 @@ def prefill_chunk_paged(params, cfg: ModelConfig, batch, pages, *,
     paged = {"block_tables": block_tables,
              "valid": jnp.arange(S, dtype=jnp.int32)[None] < lens[:, None],
              "ctx_lens": starts + lens,
+             "decode_mask": batch.get("decode_mask"),
              "backend": attn_backend, "interpret": interpret}
     if placement is None:
         placement = identity_placement(cfg)
@@ -694,6 +707,39 @@ def prefill_chunk_paged(params, cfg: ModelConfig, batch, pages, *,
     last = x[jnp.arange(B), jnp.clip(lens - 1, 0, S - 1)]
     logits = lm_logits(params["embed"], cfg, last)
     return logits, pages, stats
+
+
+def mixed_step_paged(params, cfg: ModelConfig, batch, pages, *,
+                     block_tables, placement=None, source_ids=None,
+                     n_sources: int = 0, collect_stats: bool = True,
+                     attn_backend: str = "auto", interpret: bool = False):
+    """One fused mixed dispatch: prefill chunk lanes AND 1-token decode
+    lanes in the same ragged (B, S) batch — one model call, one MoE
+    all-to-all, for a whole StepPlan mixed group.
+
+    batch extends the :func:`prefill_chunk_paged` contract with
+    ``decode_mask (B,) bool``: a decode row has ``chunk_lens == 1``,
+    ``chunk_starts`` at the request's written KV length, and its last
+    sampled token at ``tokens[b, 0]``. Decode rows write KV to the same
+    page slot a split decode step would and their logits come out
+    bit-exact with :func:`decode_step_paged` (the row-0 attention output
+    is recomputed through the paged decode kernel — the prefill flash
+    path's bf16 softmax-weight cast would otherwise diverge in low
+    bits). Prefill rows are untouched, so the whole call is bit-exact
+    with the split decode+prefill dispatches it replaces. MoE B/A stats
+    mask padding exactly as batched prefill does (decode rows contribute
+    their one real token).
+
+    Returns (logits (B, V), pages, stats): row b's logits are the
+    next-token distribution for decode rows and for prompt-completing
+    chunks, as in the split entry points.
+    """
+    assert "decode_mask" in batch, "mixed step needs batch['decode_mask']"
+    return prefill_chunk_paged(
+        params, cfg, batch, pages, block_tables=block_tables,
+        placement=placement, source_ids=source_ids, n_sources=n_sources,
+        collect_stats=collect_stats, attn_backend=attn_backend,
+        interpret=interpret)
 
 
 def decode_step_paged(params, cfg: ModelConfig, tokens, pages, lengths, *,

@@ -49,6 +49,16 @@ class EngineConfig:
     # preemption flavor when a HostKVTier is attached (same semantics as
     # PagedEngineConfig.swap_policy): "recompute" | "swap" | "auto"
     swap_policy: str = "recompute"
+    # mixed fused steps (same semantics as PagedEngineConfig.mixed_steps):
+    # decode lanes join prefill lanes in cost-aware fused dispatch groups.
+    # The sim prices the step identically either way (the cost model is
+    # token-count based), so finish times match the split path exactly —
+    # only the dispatch telemetry changes, mirroring what the real plane
+    # would launch. Empty bucket tuples price grouping at exact (B, S).
+    mixed_steps: bool = False
+    lane_buckets: Tuple[int, ...] = ()
+    chunk_buckets: Tuple[int, ...] = ()
+    dispatch_overhead_tokens: int = 16
 
 
 class DPEngine:
@@ -104,7 +114,12 @@ class DPEngine:
                           decode_reserve_extra=1,
                           prefill_preempt=(cfg.prefix_sharing
                                            or tier is not None),
-                          swap_policy=cfg.swap_policy),
+                          swap_policy=cfg.swap_policy,
+                          mixed_steps=cfg.mixed_steps,
+                          lane_buckets=cfg.lane_buckets,
+                          chunk_buckets=cfg.chunk_buckets,
+                          dispatch_overhead_tokens=(
+                              cfg.dispatch_overhead_tokens)),
             self.pool, self,
             order_waiting=self._order_waiting,
             preempt_one=self._preempt_one,
@@ -120,8 +135,11 @@ class DPEngine:
         self.busy_time = 0.0
         self.n_stalled_total = 0
         self._stalled_last = 0
-        self.prefill_dispatches = 0       # fused prefill data-plane calls
+        self.prefill_dispatches = 0       # fused prefill/mixed model calls
         self.prefill_lanes_total = 0      # real lanes across those calls
+        self.decode_dispatches = 0        # split decode calls (0 in mixed)
+        self.swap_in_blocked_total = 0
+        self._swap_in_blocked_last = 0
 
     # ---- queue ----------------------------------------------------------
     def enqueue(self, req: Request, now: float) -> None:
@@ -175,6 +193,8 @@ class DPEngine:
         self.prefix_hit_tokens += plan.prefix_hit_tokens
         self._stalled_last = plan.n_stalled
         self.n_stalled_total += plan.n_stalled
+        self._swap_in_blocked_last = plan.swap_in_blocked
+        self.swap_in_blocked_total += plan.swap_in_blocked
 
         decode_reqs = plan.decode
         n_prefill = plan.prefill_tokens
@@ -227,8 +247,17 @@ class DPEngine:
 
         self.total_prefill_tokens += n_prefill
         self.total_decode_tokens += n_decode
-        self.prefill_dispatches += len(plan.prefill_groups)
-        self.prefill_lanes_total += len(plan.prefill_lanes)
+        if plan.mixed_groups:
+            # mixed mode: the real plane would launch one fused model
+            # call per group (decode lanes ride along, no decode call)
+            self.prefill_dispatches += len(plan.mixed_groups)
+            self.prefill_lanes_total += sum(len(g)
+                                            for g in plan.mixed_groups)
+        else:
+            self.prefill_dispatches += len(plan.prefill_groups)
+            self.prefill_lanes_total += len(plan.prefill_lanes)
+            if decode_reqs:
+                self.decode_dispatches += 1
         self.busy_time += dur
 
         routed = None
@@ -272,6 +301,7 @@ class DPEngine:
             n_running=len(self.running),
             n_waiting=len(self.waiting),
             n_stalled=self._stalled_last,
+            swap_in_blocked=float(self._swap_in_blocked_last),
             swapped_tokens=float(getattr(self.pool, "swapped_tokens", 0)),
             swap_in_bytes=swap_in_bytes,
             # same prefix-affinity digest as the real paged engine, off

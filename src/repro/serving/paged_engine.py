@@ -36,8 +36,9 @@ from repro.serving.engine_util import (PrefixSummaryShipper,
 from repro.serving.kv_tier import HostKVTier, TieredSharedAllocator
 from repro.serving.paged import PagedBlockAllocator, SharedPagedAllocator
 from repro.serving.request import Request, RequestState
-from repro.serving.step_plan import (PlannerConfig, PrefillLane,
-                                     StepPlanner, written_kv_len)
+from repro.serving.step_plan import (PlannerConfig, PrefillLane, StepPlan,
+                                     StepPlanner, mixed_chunk_bucket,
+                                     written_kv_len)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,6 +74,15 @@ class PagedEngineConfig:
     # preemption flavor when a HostKVTier backs the pool: "recompute" |
     # "swap" | "auto" (measured SwapCostModel decides per victim)
     swap_policy: str = "recompute"
+    # mixed fused steps: decode lanes join prefill lanes in single
+    # cost-aware grouped model dispatches (models/transformer.py::
+    # mixed_step_paged) instead of one decode call + per-group prefill
+    # calls. Off keeps the PR 5 split-dispatch path (the A/B baseline).
+    mixed_steps: bool = False
+    # fixed cost the mixed grouper charges per dispatch, in token
+    # equivalents (kernel launch + MoE weight streaming): higher values
+    # fuse more aggressively, trading (B, S) padding for fewer calls
+    dispatch_overhead_tokens: int = 16
 
     @property
     def max_len(self) -> int:
@@ -95,7 +105,13 @@ class PagedModelRunner:
                                 if ragged_dispatch is None
                                 else ragged_dispatch)
         self._prefill_jits: Dict[Tuple[int, int], object] = {}
+        self._mixed_jits: Dict[Tuple[int, int], object] = {}
         self._decode_jit = jax.jit(self._pin(self._decode_fn))
+        # (B, S)-bucket padding accounting across every dispatch this
+        # runner serves: padded minus real tokens. The cost-aware mixed
+        # grouper exists to push waste down; the bench reads these.
+        self.padding_waste_tokens = 0
+        self.padded_tokens_total = 0
 
     def _pin(self, fn):
         """Pin this runner's MoE dispatch mode while jit traces ``fn``."""
@@ -120,24 +136,54 @@ class PagedModelRunner:
             attn_backend=self.ecfg.attn_backend,
             interpret=self.ecfg.interpret)
 
+    def _mixed_fn(self, params, batch, pages, block_tables, placement,
+                  source_ids):
+        return tfm.mixed_step_paged(
+            params, self.cfg, batch, pages, block_tables=block_tables,
+            placement=placement, source_ids=source_ids,
+            n_sources=self.n_sources, collect_stats=self.cfg.moe.enabled,
+            attn_backend=self.ecfg.attn_backend,
+            interpret=self.ecfg.interpret)
+
+    def _count_padding(self, padded: int, real: int) -> None:
+        self.padded_tokens_total += padded
+        self.padding_waste_tokens += padded - real
+
     def decode(self, tokens, pages, lengths, block_tables, active,
                placement, source_ids):
+        B = int(tokens.shape[0])
+        self._count_padding(B, int(np.asarray(active).sum()))
         return self._decode_jit(self.params, tokens, pages, lengths,
                                 block_tables, active, placement, source_ids)
 
     def prefill_chunk(self, batch, pages, block_tables, placement,
                       source_ids):
         B, S = (int(batch["tokens"].shape[0]), int(batch["tokens"].shape[1]))
+        self._count_padding(B * S, int(np.asarray(batch["chunk_lens"]).sum()))
         if (B, S) not in self._prefill_jits:  # one compile per (lane, chunk)
             self._prefill_jits[(B, S)] = jax.jit(self._pin(self._prefill_fn))
         return self._prefill_jits[(B, S)](self.params, batch, pages,
                                           block_tables, placement, source_ids)
+
+    def mixed_step(self, batch, pages, block_tables, placement, source_ids):
+        """One fused mixed-group dispatch (decode + prefill lanes)."""
+        B, S = (int(batch["tokens"].shape[0]), int(batch["tokens"].shape[1]))
+        self._count_padding(B * S, int(np.asarray(batch["chunk_lens"]).sum()))
+        if (B, S) not in self._mixed_jits:
+            self._mixed_jits[(B, S)] = jax.jit(self._pin(self._mixed_fn))
+        return self._mixed_jits[(B, S)](self.params, batch, pages,
+                                        block_tables, placement, source_ids)
 
     def bucket_for(self, chunk: int) -> int:
         for b in self.ecfg.chunk_buckets:
             if chunk <= b:
                 return b
         return self.ecfg.chunk_buckets[-1]
+
+    def mixed_bucket_for(self, chunk: int) -> int:
+        """Padded S for a mixed dispatch — the planner's grouping cost
+        uses the same function, so priced and physical shapes agree."""
+        return mixed_chunk_bucket(chunk, self.ecfg.chunk_buckets)
 
     def lane_bucket_for(self, n_lanes: int) -> int:
         """Padded batch size for a fused prefill dispatch of ``n_lanes``."""
@@ -207,7 +253,12 @@ class PagedRealEngine:
                           chunk_cap=self.ecfg.chunk_buckets[-1],
                           lanes_per_dispatch=self.ecfg.max_prefill_lanes,
                           sharing=self.sharing,
-                          swap_policy=self.ecfg.swap_policy),
+                          swap_policy=self.ecfg.swap_policy,
+                          mixed_steps=self.ecfg.mixed_steps,
+                          lane_buckets=self.ecfg.lane_buckets,
+                          chunk_buckets=self.ecfg.chunk_buckets,
+                          dispatch_overhead_tokens=(
+                              self.ecfg.dispatch_overhead_tokens)),
             self.pool, self,
             order_waiting=lambda w, now: order_queue(w, now, self.qcfg),
             preempt_one=self._preempt_one,
@@ -228,8 +279,13 @@ class PagedRealEngine:
         # per-step telemetry (mirrors DPEngine for the harness/bench)
         self.total_prefill_tokens = 0
         self.total_decode_tokens = 0
-        self.prefill_dispatches = 0       # fused prefill data-plane calls
+        self.prefill_dispatches = 0       # fused prefill/mixed model calls
         self.prefill_lanes_total = 0      # real lanes across those calls
+        self.decode_dispatches = 0        # split decode model calls (0 in
+                                          # mixed mode — decode lanes ride
+                                          # the fused dispatches)
+        self.swap_in_blocked_total = 0    # head-of-line swap-ins the pool
+        self._swap_in_blocked_last = 0    # could not back (tiered pools)
 
     # ---- pool / tier plumbing --------------------------------------------
     def _make_pool(self):
@@ -454,14 +510,19 @@ class PagedRealEngine:
         self.prefix_hit_tokens += plan.prefix_hit_tokens
         self._stalled_last = plan.n_stalled
         self.n_stalled_total += plan.n_stalled
+        self._swap_in_blocked_last = plan.swap_in_blocked
+        self.swap_in_blocked_total += plan.swap_in_blocked
         self._swap_in_bytes_window += sum(rec.nbytes
                                           for rec in plan.swap_in)
 
         finished: List[Request] = []
-        for group in plan.prefill_groups:
-            finished.extend(self._run_prefill_group(group, now))
-        if plan.decode:
-            finished.extend(self._run_decode(plan.decode, now))
+        if plan.mixed_groups:
+            finished.extend(self._run_mixed(plan, now))
+        else:
+            for group in plan.prefill_groups:
+                finished.extend(self._run_prefill_group(group, now))
+            if plan.decode:
+                finished.extend(self._run_decode(plan.decode, now))
         if plan.has_work:
             self.step_count += 1
         return finished
@@ -525,6 +586,85 @@ class PagedRealEngine:
                     finished.append(r)
         return finished
 
+    def _dispatch_mixed_group(self, group: List[PrefillLane]) -> Dict[int, int]:
+        """One fused mixed dispatch: pad the group's decode + prefill
+        lanes to the runner's mixed (B, S) bucket (S=1 when the group is
+        all decode) and run ``mixed_step_paged``. Returns req_id -> the
+        argmax next token of each lane's chunk-end logits; effect
+        application is the caller's job (canonical split order)."""
+        S = self.runner.mixed_bucket_for(max(l.chunk for l in group))
+        B = self.runner.lane_bucket_for(len(group))
+        toks = np.zeros((B, S), np.int32)
+        starts = np.zeros(B, np.int32)
+        lens = np.zeros(B, np.int32)
+        dmask = np.zeros(B, bool)
+        rids: List[Optional[int]] = [None] * B
+        for i, l in enumerate(group):
+            if l.decode:
+                toks[i, 0] = l.req.output_tokens[-1]
+            else:
+                toks[i, :l.chunk] = \
+                    l.req.prompt_tokens[l.start:l.start + l.chunk]
+            starts[i] = l.start
+            lens[i] = l.chunk
+            dmask[i] = l.decode
+            rids[i] = l.req.req_id
+        batch = {"tokens": jnp.asarray(toks),
+                 "chunk_starts": jnp.asarray(starts),
+                 "chunk_lens": jnp.asarray(lens),
+                 "decode_mask": jnp.asarray(dmask)}
+        bt = jnp.asarray(self.pool.block_table_array(
+            rids, self.ecfg.max_blocks_per_req))
+        t0 = time.perf_counter()
+        logits, self.pages, stats = self.runner.mixed_step(
+            batch, self.pages, bt, jnp.asarray(self.placement),
+            jnp.full((B,), self.engine_id, jnp.int32))
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))   # sync point
+        if self.swap_cost is not None:
+            self.swap_cost.observe_prefill(int(lens.sum()),
+                                           time.perf_counter() - t0)
+        self.prefill_dispatches += 1
+        self.prefill_lanes_total += len(group)
+        if stats is not None:
+            self.stats_log.append(jax.tree.map(np.asarray, stats))
+        return {l.req.req_id: int(nxt[i]) for i, l in enumerate(group)}
+
+    def _run_mixed(self, plan: StepPlan, now: float) -> List[Request]:
+        """Execute a mixed-step plan: dispatch every fused group, then
+        apply per-request effects in the canonical SPLIT order (prefill
+        lanes in packing order, then decode lanes) — prefix-cache
+        registration and finish order thus match the split path exactly,
+        which the mixed/split differential tests rely on. Sound because
+        each request appears in at most one lane and COW happened at
+        plan time, so dispatch order cannot change any lane's output."""
+        next_tok: Dict[int, int] = {}
+        for group in plan.mixed_groups:
+            next_tok.update(self._dispatch_mixed_group(group))
+        finished: List[Request] = []
+        for l in plan.prefill_lanes:
+            r = l.req
+            r.prefill_done += l.chunk
+            self.total_prefill_tokens += l.chunk
+            if self.sharing:
+                full = r.prefill_done - r.prefill_done % self.ecfg.page_size
+                self.pool.register_prefix(r.req_id, r.prompt_tokens[:full])
+            if r.remaining_prefill == 0:
+                r.output_tokens = [next_tok[r.req_id]]
+                r.generated = 1
+                if r.first_token_time < 0:
+                    r.first_token_time = now
+                if r.done:
+                    self._finish(r, now)
+                    finished.append(r)
+        for r in plan.decode:
+            r.output_tokens.append(next_tok[r.req_id])
+            r.generated += 1
+            self.total_decode_tokens += 1
+            if r.done or written_kv_len(r) + 1 >= self.ecfg.max_len:
+                self._finish(r, now)
+                finished.append(r)
+        return finished
+
     def _run_decode(self, decode_reqs: List[Request],
                     now: float) -> List[Request]:
         B = self.ecfg.max_batch
@@ -546,6 +686,7 @@ class PagedRealEngine:
             jnp.asarray(self.placement),
             jnp.full((B,), self.engine_id, jnp.int32))
         nxt = np.asarray(jnp.argmax(logits, axis=-1))   # sync point
+        self.decode_dispatches += 1
         if self.swap_cost is not None:
             self.swap_cost.observe_decode(time.perf_counter() - t0)
         if stats is not None:
@@ -576,6 +717,7 @@ class PagedRealEngine:
             n_running=len(self.running),
             n_waiting=len(self.waiting),
             n_stalled=self._stalled_last,
+            swap_in_blocked=float(self._swap_in_blocked_last),
             swapped_tokens=float(getattr(self.pool, "swapped_tokens", 0)),
             swap_in_bytes=swap_in_bytes,
             # radix-cache digest (the scheduler's prefix-affinity signal):

@@ -428,6 +428,11 @@ def serve_real_cluster(requests: List[Request], engines, *,
         "expert_moves": coord.placement.n_migrations if coord else 0,
         "preemptions": sum(r.n_preemptions for r in requests),
         "stalled": sum(getattr(e, "n_stalled_total", 0) for e in engines),
+        # head-of-line swap-ins the pool could not back (tiered pools):
+        # tier pressure Algorithm 1 would otherwise misread as ordinary
+        # full-pool stalls
+        "swap_in_blocked": sum(getattr(e, "swap_in_blocked_total", 0)
+                               for e in engines),
         "kv_peak": kv_peak,
         # ---- fault-tolerance telemetry. Per-request errors are surfaced
         # verbatim so degraded runs are truthful: enqueue rejections, shed
@@ -496,6 +501,11 @@ def serve_real_cluster(requests: List[Request], engines, *,
         "prefill_lanes_per_dispatch": (
             sum(e.prefill_lanes_total for e in engines)
             / max(sum(e.prefill_dispatches for e in engines), 1)),
+        # split decode model calls (0 when every engine runs mixed fused
+        # steps); prefill_dispatches + decode_dispatches = total model
+        # dispatches, the mixed-vs-split A/B headline
+        "decode_dispatches": sum(getattr(e, "decode_dispatches", 0)
+                                 for e in engines),
         "decisions": getattr(sched, "decisions", {}),
         "per_engine": {e.engine_id: sum(1 for r in requests
                                         if r.engine_id == e.engine_id

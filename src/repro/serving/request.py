@@ -31,6 +31,10 @@ class Request:
     first_token_time: float = -1.0
     finish_time: float = -1.0
     n_preemptions: int = 0
+    preempt_written: int = 0       # KV tokens lost at the last recompute
+                                   # preemption — the anti-thrash gate
+                                   # demands this much projected headroom
+                                   # back before re-admitting
     error: Optional[str] = None    # set when FINISHED is a rejection, a shed
                                    # admission, or a quarantined recovery —
                                    # e.g. a prompt exceeding KV capacity

@@ -67,15 +67,41 @@ class PlannerConfig:
     # "auto" (the measured SwapCostModel picks per victim). Ignored when
     # the pool has no tier behind it.
     swap_policy: str = "recompute"
+    # mixed fused steps: decode lanes become 1-token prefill-like lanes
+    # and join the prefill lanes in ``StepPlan.mixed_groups`` — one model
+    # dispatch per group under the same token budget. The split
+    # decode/prefill_groups lists stay populated (they carry the step's
+    # semantics either way); the data plane executes mixed_groups when
+    # non-empty.
+    mixed_steps: bool = False
+    # cost-aware grouping inputs (mixed_steps): the data plane pads a
+    # group to (lane_bucket(B), chunk_bucket(max chunk)), so the planner
+    # prices candidate groups in padded tokens plus a fixed per-dispatch
+    # overhead and partitions size-sorted lanes to minimize the total.
+    # Empty bucket tuples price at the exact (B, S) — the sim default.
+    lane_buckets: Tuple[int, ...] = ()
+    chunk_buckets: Tuple[int, ...] = ()
+    # modeled fixed cost of one model dispatch, in padded-token
+    # equivalents (kernel launch + MoE all-to-all): raising it makes the
+    # grouper fuse more aggressively, 0 never fuses lanes whose bucket
+    # padding outweighs the saved dispatch
+    dispatch_overhead_tokens: int = 16
 
 
 @dataclasses.dataclass(frozen=True)
 class PrefillLane:
-    """One request's chunk span within a fused prefill dispatch."""
+    """One request's chunk span within a fused prefill dispatch.
+
+    ``decode=True`` marks a 1-token decode lane riding a mixed fused
+    dispatch (``StepPlan.mixed_groups``): ``start`` is the request's
+    written KV length, the token comes from its output stream, and the
+    lane's chunk-end logits are the next-token distribution.
+    """
 
     req: Request
-    start: int          # == req.prefill_done at plan time
-    chunk: int          # tokens to prefill this step (>= 1)
+    start: int          # == req.prefill_done at plan time (decode: written)
+    chunk: int          # tokens to prefill this step (>= 1; decode: == 1)
+    decode: bool = False
 
 
 @dataclasses.dataclass
@@ -91,6 +117,18 @@ class StepPlan:
     # the data plane prices/report them, it does not re-run them
     swap_out: List[SwapRecord] = dataclasses.field(default_factory=list)
     swap_in: List[SwapRecord] = dataclasses.field(default_factory=list)
+    # head-of-line swap-ins the pool could not back this step (tiered
+    # pools only): admission stalled on a swapped request — distinct from
+    # an ordinary full-pool stall, so Algorithm 1 can see tier pressure
+    swap_in_blocked: int = 0
+    # mixed fused dispatch groups (PlannerConfig.mixed_steps): decode
+    # lanes as 1-token PrefillLane(decode=True) plus the prefill lanes,
+    # partitioned by the cost-aware grouper. Non-empty ⇒ the data plane
+    # runs ONE model call per group instead of decode + prefill_groups;
+    # ``decode``/``prefill_groups`` still carry the step's semantics
+    # (effects, pricing, invariants) and must cover the same requests.
+    mixed_groups: List[List[PrefillLane]] = dataclasses.field(
+        default_factory=list)
 
     @property
     def prefill_lanes(self) -> List[PrefillLane]:
@@ -103,6 +141,23 @@ class StepPlan:
     @property
     def has_work(self) -> bool:
         return bool(self.decode or self.prefill_groups or self.n_stalled)
+
+
+def bucket_up(n: int, buckets: Tuple[int, ...]) -> int:
+    """Smallest bucket >= n (identity when no buckets; the largest bucket
+    when n exceeds them all — callers bound n separately)."""
+    for b in buckets:
+        if n <= b:
+            return b
+    return buckets[-1] if buckets else n
+
+
+def mixed_chunk_bucket(chunk: int, chunk_buckets: Tuple[int, ...]) -> int:
+    """Padded S for a mixed dispatch: the prefill chunk buckets plus an
+    S=1 bucket, so an all-decode group lowers to the decode shape instead
+    of paying the smallest prefill bucket. The single definition — the
+    planner's grouping cost and the runner's padding must agree."""
+    return bucket_up(chunk, (1,) + tuple(chunk_buckets))
 
 
 def written_kv_len(r: Request) -> int:
@@ -147,6 +202,9 @@ class StepPlanner:
                                                       protect))
         self._swap_out_recs: List[SwapRecord] = []
         self._swap_in_recs: List[SwapRecord] = []
+        self._swap_in_blocked = 0
+        self._decode_rr = 0       # round-robin offset when the decode cap
+                                  # binds, so deferred lanes never starve
 
     # ---- preemption: swap-vs-recompute -----------------------------------
     def _try_swap_out(self, protect: Optional[Request]) -> bool:
@@ -183,9 +241,39 @@ class StepPlanner:
         return True
 
     def _preempt(self, protect: Optional[Request]) -> bool:
-        return self._try_swap_out(protect) or self._preempt_one(protect)
+        if self._try_swap_out(protect):
+            return True
+        # recompute preemption wipes the victim's progress; remember how
+        # much KV it lost so re-admission can demand that much projected
+        # headroom back (the anti-thrash gate in _admit)
+        before = list(self.host.running)
+        written = {r.req_id: written_kv_len(r) for r in before}
+        if not self._preempt_one(protect):
+            return False
+        still = {r.req_id for r in self.host.running}
+        for r in before:
+            if r.req_id not in still:
+                r.preempt_written = written[r.req_id]
+        return True
 
     # ---- admission -------------------------------------------------------
+    def _headroom_for(self, r: Request, first: int) -> bool:
+        """Anti-thrash re-admission gate: a recompute-preempted request
+        may only come back when the pool's FREE blocks cover the KV it
+        lost at eviction plus its next chunk — i.e. the projected
+        footprint is allocatable without evicting a peer. Re-admitting
+        into the hole its own eviction opened just evicts the evictor
+        back (the recompute-mode ping-pong the planner property test
+        documents); demanding the lost footprint as headroom means every
+        re-admission round coincides with real peer progress, which
+        bounds thrash. The projection is capped at the request's full
+        trajectory (a finished-size footprint can always be demanded)."""
+        pool = self.pool
+        projected = min(r.preempt_written + r.prefill_done + first,
+                        r.prompt_len + r.max_new_tokens)
+        need = pool.blocks_for(projected, pool.block_size)
+        return need <= pool.free_blocks
+
     def _admit(self, now: float) -> Tuple[int, int]:
         host = self.host
         host.waiting = self._order_waiting(host.waiting, now)
@@ -201,11 +289,18 @@ class StepPlanner:
                 # re-admission costs a transfer, not a recompute
                 rec = self.pool.swap_in_request(r.req_id)
                 if rec is None:
-                    break              # pool cannot back it yet: no bypass
+                    # pool cannot back it yet: no bypass. Counted, not
+                    # silent — a blocked head-of-line swap-in looks like
+                    # an ordinary full-pool stall otherwise
+                    self._swap_in_blocked += 1
+                    break
                 self._swap_in_recs.append(rec)
                 r.state = RequestState.RUNNING
                 admitted.append(r)
                 continue
+            if r.n_preemptions > 0 and not self._headroom_for(
+                    r, min(r.remaining_prefill, self.cfg.token_budget)):
+                break   # anti-thrash gate (no bypass, like a failed alloc)
             matched = match_prefix_on_admit(self.pool, r) \
                 if self.cfg.sharing else 0
             first = min(r.remaining_prefill, self.cfg.token_budget)
@@ -234,16 +329,31 @@ class StepPlanner:
     # ---- the step plan ---------------------------------------------------
     def plan(self, now: float) -> StepPlan:
         self._swap_out_recs, self._swap_in_recs = [], []
+        self._swap_in_blocked = 0
         n_admitted, hit_tokens = self._admit(now)
         running = self.host.running
 
         decode = [r for r in running if r.remaining_prefill == 0]
         prefill = [r for r in running if r.remaining_prefill > 0]
 
+        # decode lanes spend the same per-step token budget prefill does
+        # (one token each): cap them BEFORE growth so a deferred lane gets
+        # no side effects this step — it stays RUNNING, holds its pages,
+        # and decodes on a later step (round-robin, so the tail cannot
+        # starve under permanent over-subscription). Without the cap,
+        # len(decode) could exceed token_budget and silently over-pack
+        # the step. Stall-accounted: a deferred lane is budget pressure.
+        stalled = 0
+        if len(decode) > self.cfg.token_budget:
+            k = self._decode_rr % len(decode)
+            decode = decode[k:] + decode[:k]
+            stalled = len(decode) - self.cfg.token_budget
+            decode = decode[:self.cfg.token_budget]
+            self._decode_rr += self.cfg.token_budget
+
         # KV growth for decoders: preempt under pressure; if even
         # preemption cannot free a page, STALL the lane this step (no
         # token, no write) instead of decoding without backing pages.
-        stalled = 0
         for r in list(decode):
             if r.state is RequestState.PREEMPTED:   # evicted by earlier lane
                 decode.remove(r)
@@ -285,11 +395,52 @@ class StepPlanner:
 
         g = max(self.cfg.lanes_per_dispatch, 1)
         groups = [lanes[i:i + g] for i in range(0, len(lanes), g)]
+        mixed = self._mixed_groups(decode, lanes) \
+            if self.cfg.mixed_steps else []
         return StepPlan(decode=decode, prefill_groups=groups,
                         n_stalled=stalled, n_admitted=n_admitted,
                         prefix_hit_tokens=hit_tokens,
                         swap_out=self._swap_out_recs,
-                        swap_in=self._swap_in_recs)
+                        swap_in=self._swap_in_recs,
+                        swap_in_blocked=self._swap_in_blocked,
+                        mixed_groups=mixed)
+
+    # ---- cost-aware mixed grouping ---------------------------------------
+    def _mixed_groups(self, decode: List[Request],
+                      lanes: List[PrefillLane]) -> List[List[PrefillLane]]:
+        """Partition this step's lanes (decode as 1-token lanes plus the
+        prefill lanes) into fused dispatch groups minimizing modeled
+        padded cost. The data plane pads a group to
+        ``(lane_bucket(B), mixed_chunk_bucket(max chunk))``, so a group's
+        cost is ``dispatch_overhead_tokens + B_pad * S_pad``; lanes are
+        sorted by chunk size (stable) so similar-S lanes sit adjacent and
+        the optimal bucketed partition is contiguous — found exactly by a
+        small DP over group sizes up to ``lanes_per_dispatch``."""
+        all_lanes = [PrefillLane(r, written_kv_len(r), 1, decode=True)
+                     for r in decode] + list(lanes)
+        if not all_lanes:
+            return []
+        cfg = self.cfg
+        g = max(cfg.lanes_per_dispatch, 1)
+        all_lanes.sort(key=lambda l: l.chunk)   # stable: decode first
+        n = len(all_lanes)
+        best = [0.0] + [float("inf")] * n       # best[i]: first i lanes
+        cut = [0] * (n + 1)
+        for i in range(1, n + 1):
+            s_pad = mixed_chunk_bucket(all_lanes[i - 1].chunk,
+                                       cfg.chunk_buckets)
+            for j in range(max(0, i - g), i):
+                b_pad = bucket_up(i - j, cfg.lane_buckets)
+                c = best[j] + cfg.dispatch_overhead_tokens + b_pad * s_pad
+                if c < best[i]:
+                    best[i], cut[i] = c, j
+        groups: List[List[PrefillLane]] = []
+        i = n
+        while i > 0:
+            groups.append(all_lanes[cut[i]:i])
+            i = cut[i]
+        groups.reverse()
+        return groups
 
 
 def check_plan_invariants(plan: StepPlan, cfg: PlannerConfig, pool,
@@ -308,6 +459,9 @@ def check_plan_invariants(plan: StepPlan, cfg: PlannerConfig, pool,
     budget = max(cfg.token_budget - len(plan.decode), 0)
     assert plan.prefill_tokens <= budget, \
         f"budget violated: {plan.prefill_tokens} > {budget}"
+    assert len(plan.decode) + plan.prefill_tokens <= cfg.token_budget, \
+        (f"step over-packed: {len(plan.decode)} decode + "
+         f"{plan.prefill_tokens} prefill > {cfg.token_budget}")
     for g in plan.prefill_groups:
         assert 1 <= len(g) <= max(cfg.lanes_per_dispatch, 1), \
             "dispatch group exceeds lanes_per_dispatch"
@@ -331,5 +485,28 @@ def check_plan_invariants(plan: StepPlan, cfg: PlannerConfig, pool,
             "swapped-out request still holds device pages"
     for rec in plan.swap_in:
         assert rec.kind == "in" and rec.n_pages >= 1
+    if plan.mixed_groups:
+        # mixed groups must be a repartition of exactly the split plan:
+        # every decode request once as a 1-token decode lane over its
+        # written KV, every prefill lane once and unchanged
+        mixed = [l for g in plan.mixed_groups for l in g]
+        assert len(mixed) == len(plan.decode) + len(plan.prefill_lanes), \
+            "mixed groups do not cover the split plan"
+        mixed_ids = set()
+        for l in mixed:
+            assert l.req.req_id not in mixed_ids, \
+                f"request {l.req.req_id} in two mixed lanes"
+            mixed_ids.add(l.req.req_id)
+            if l.decode:
+                assert l.chunk == 1 and l.start == written_kv_len(l.req), \
+                    "decode lane must be one token at the written KV end"
+            else:
+                assert l.start == l.req.prefill_done and l.chunk >= 1
+        split_ids = {r.req_id for r in plan.decode} \
+            | {l.req.req_id for l in plan.prefill_lanes}
+        assert mixed_ids == split_ids, "mixed/split request sets differ"
+        for g in plan.mixed_groups:
+            assert 1 <= len(g) <= max(cfg.lanes_per_dispatch, 1), \
+                "mixed group exceeds lanes_per_dispatch"
     if hasattr(pool, "check_invariants"):
         pool.check_invariants()
