@@ -1,0 +1,159 @@
+"""Scenario stress harness bench (BENCH_scenarios).
+
+Runs every registered scenario (workloads/scenarios.py) on the simulated
+plane — 10^5 requests each in full mode (REPRO_STRESS_REQUESTS
+overrides), reduced in FAST/smoke mode — with streaming percentile
+metrics, then replays the two cache-headline scenarios as real-plane
+slices (same scenario shapes scaled to the tiny CPU cluster through
+``build_real_slice``) on a shared jitted ``PagedModelRunner``.
+
+Every run asserts the scenario invariant pack (all requests terminal, no
+duplicates, monotone virtual time, prefill/decode conservation,
+streaming estimates consistent with exact percentiles), so the bench
+doubles as a long-horizon property test. Headline assert: the
+multi-turn session scenario's prefix hit rate strictly exceeds its
+one-shot counterpart's on BOTH planes — grown-prefix re-arrival is the
+thing one-shot traces cannot express.
+
+Emits ``experiments/bench/BENCH_scenarios.json``: per-scenario p50/p99
+TTFT/TPOT/E2E tables plus scheduler/cache/swap telemetry and the
+invariant aggregates. ``REPRO_STRESS_BUDGET_S`` (full mode) fails the
+run when the sim sweep exceeds the wall-clock budget.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+from benchmarks.common import FAST, emit, save_json
+
+N_SIM = 2_000 if FAST else int(os.environ.get("REPRO_STRESS_REQUESTS",
+                                              100_000))
+N_REAL = 10 if FAST else 192
+SEED = 7
+REAL_SCENARIOS = ("agentic_sessions", "chat_oneshot")
+
+
+def _serve_real(scenario, cfg, params, runner, ecfg, n_requests, seed):
+    from repro.core.metrics import StreamingMetrics
+    from repro.serving import (PagedRealEngine, RealClusterConfig,
+                               serve_real_cluster)
+    from repro.workloads.scenarios import (build_real_slice,
+                                           check_scenario_invariants)
+    engines = [PagedRealEngine(i, cfg, params, ecfg, runner=runner,
+                               n_sources=2) for i in range(2)]
+    max_prompt = ecfg.max_blocks_per_req * ecfg.page_size - 16
+    reqs = build_real_slice(scenario, n_requests, seed=seed,
+                            vocab=cfg.vocab_size, max_prompt=max_prompt,
+                            rps=3.0)
+    metrics = StreamingMetrics(window_s=10.0, seed=seed)
+    t0 = time.perf_counter()
+    res = serve_real_cluster(reqs, engines,
+                             cluster_cfg=RealClusterConfig(
+                                 window_tokens=250),
+                             metrics=metrics)
+    wall = time.perf_counter() - t0
+    inv = check_scenario_invariants(reqs, res, engines=engines,
+                                    metrics=metrics)
+    snap = metrics.snapshot()
+    return {
+        "scenario": scenario.name, "kind": scenario.kind, "plane": "real",
+        "n_requests": len(reqs), "seed": seed,
+        "duration_s": res.duration_s, "wall_s": wall,
+        "rounds": res.signals["rounds"],
+        "latency": snap["metrics"],
+        "scheduler": {"decisions": {k: int(v) for k, v in
+                                    res.signals["decisions"].items()},
+                      "preemptions": res.signals["preemptions"],
+                      "prefill_dispatches":
+                          res.signals["prefill_dispatches"]},
+        "cache": {"prefix_hit_tokens": inv.get("prefix_hit_tokens", 0),
+                  "hit_rate": inv.get("hit_rate", 0.0),
+                  "pages_allocated": res.signals["pages_allocated"],
+                  "kv_peak": res.signals["kv_peak"]},
+        "swap": {"swapped_tokens": res.signals["swapped_tokens"]},
+        "invariants": {k: float(v) for k, v in inv.items()},
+        "invariants_ok": True,
+    }
+
+
+def run() -> None:
+    from repro.workloads.scenarios import SCENARIOS, run_scenario
+
+    # ---- sim plane: every registered scenario at stress scale ------------
+    budget_s = float(os.environ.get("REPRO_STRESS_BUDGET_S", 0.0))
+    t_sim = time.perf_counter()
+    sim_rows = {}
+    for name in sorted(SCENARIOS):
+        dash, _ = run_scenario(SCENARIOS[name], N_SIM, seed=SEED)
+        sim_rows[name] = dash
+        emit(f"scenario_{name}", dash["wall_s"] * 1e6,
+             f"n={dash['n_requests']} "
+             f"p50_ttft={dash['latency']['ttft']['p50']:.3f}s "
+             f"p99_ttft={dash['latency']['ttft']['p99']:.3f}s "
+             f"p50_tpot={dash['latency'].get('tpot', {}).get('p50', 0):.4f}s "
+             f"hit={dash['cache']['hit_rate']:.3f} "
+             f"rq_per_wall_s={dash['requests_per_wall_s']:.0f}")
+    sim_wall = time.perf_counter() - t_sim
+
+    n_session = sum(1 for s in SCENARIOS.values() if s.kind == "session")
+    assert len(sim_rows) >= 3 and n_session >= 1, \
+        "registry must cover >= 3 scenarios incl. a session scenario"
+    hit_s = sim_rows["agentic_sessions"]["cache"]["hit_rate"]
+    hit_1 = sim_rows["chat_oneshot"]["cache"]["hit_rate"]
+    assert hit_s > hit_1, \
+        f"session scenario must out-hit its one-shot counterpart " \
+        f"({hit_s:.3f} vs {hit_1:.3f})"
+    if budget_s and not FAST:
+        assert sim_wall <= budget_s, \
+            f"sim sweep took {sim_wall:.0f}s > budget {budget_s:.0f}s"
+
+    # ---- real plane: cache-headline scenario slices ----------------------
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.configs.base import reduced
+    from repro.models import build_model
+    from repro.serving import PagedEngineConfig, PagedModelRunner
+
+    cfg = reduced(get_smoke_config("qwen3-moe-30b-a3b"), n_layers=2)
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    ecfg = PagedEngineConfig(page_size=8, n_pages=96, max_blocks_per_req=8,
+                             max_batch=4, token_budget=16,
+                             chunk_buckets=(8, 16), attn_backend="xla",
+                             prefix_sharing=True)
+    runner = PagedModelRunner(cfg, params, ecfg, n_sources=2)
+    real_rows = {}
+    for name in REAL_SCENARIOS:
+        real_rows[name] = _serve_real(SCENARIOS[name], cfg, params, runner,
+                                      ecfg, N_REAL, SEED)
+        d = real_rows[name]
+        emit(f"scenario_real_{name}", d["wall_s"] * 1e6,
+             f"n={d['n_requests']} rounds={d['rounds']} "
+             f"p50_ttft={d['latency']['ttft']['p50']:.3f}s "
+             f"hit={d['cache']['hit_rate']:.3f}")
+    rhit_s = real_rows["agentic_sessions"]["cache"]["hit_rate"]
+    rhit_1 = real_rows["chat_oneshot"]["cache"]["hit_rate"]
+    assert rhit_s > rhit_1, \
+        f"real-plane session slice must out-hit one-shot " \
+        f"({rhit_s:.3f} vs {rhit_1:.3f})"
+
+    payload = {
+        "config": {"n_sim_requests": N_SIM, "n_real_requests": N_REAL,
+                   "seed": SEED, "fast": FAST, "sim_wall_s": sim_wall,
+                   "budget_s": budget_s},
+        "sim": sim_rows,
+        "real": real_rows,
+        "hit_rate_session_sim": hit_s,
+        "hit_rate_oneshot_sim": hit_1,
+        "hit_rate_session_real": rhit_s,
+        "hit_rate_oneshot_real": rhit_1,
+    }
+    path = save_json("BENCH_scenarios", payload)
+    emit("scenarios_headline", 0.0,
+         f"scenarios={len(sim_rows)}x{N_SIM} sim_wall={sim_wall:.0f}s "
+         f"session_hit={hit_s:.3f} oneshot_hit={hit_1:.3f} "
+         f"real_session_hit={rhit_s:.3f} json={path}")
+
+
+if __name__ == "__main__":
+    run()

@@ -21,9 +21,12 @@ bench kills an engine mid-run and asserts every request still completes
 bit-exact; the KV-tier bench asserts swapped pages round-trip bit-exact
 with zero re-prefill, the int8 page layout holds >= 1.8x tokens at
 equal bytes, and the measured cost model beats both fixed preemption
-policies — so a regression in the radix cache, the affinity signal, the
-StepPlanner lane fusion, the mixed fused steps, the crash-recovery path
-or the KV tier fails the smoke lane fast.
+policies; the scenario stress bench (``BENCH_scenarios.json``) serves
+every registered scenario with the full invariant pack on and asserts
+the multi-turn session scenario out-hits its one-shot counterpart on
+both planes — so a regression in the radix cache, the affinity signal,
+the StepPlanner lane fusion, the mixed fused steps, the crash-recovery
+path, the KV tier or the scenario harness fails the smoke lane fast.
 """
 from __future__ import annotations
 
@@ -49,6 +52,7 @@ MODULES = [
     "benchmarks.fig_mixed_step",
     "benchmarks.fig_fault_recovery",
     "benchmarks.fig_kv_tier",
+    "benchmarks.fig_scenarios",
     "benchmarks.roofline_table",
 ]
 
@@ -59,7 +63,8 @@ SMOKE_MODULES = ["benchmarks.fig_ragged_dispatch",
                  "benchmarks.fig_batched_prefill",
                  "benchmarks.fig_mixed_step",
                  "benchmarks.fig_fault_recovery",
-                 "benchmarks.fig_kv_tier"]
+                 "benchmarks.fig_kv_tier",
+                 "benchmarks.fig_scenarios"]
 
 
 def main() -> None:

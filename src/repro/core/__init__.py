@@ -7,8 +7,12 @@
 - placement:   source-aware greedy expert placement (§5.2-5.3)
 - minlp:       offline placement reference + (beta, gamma) calibration (§6)
 - coordinator: the cross-level feedback loop (§3)
+- metrics:     O(1)-memory streaming latency percentiles (stress harness)
 """
 from repro.core.coordinator import CoordinatorConfig, GimbalCoordinator
+from repro.core.metrics import (P2Quantile, ReservoirQuantile, StreamingStat,
+                                StreamingMetrics, WindowedSeries,
+                                merged_quantile)
 from repro.core.minlp import (CalibrationResult, anneal_layer,
                               brute_force_layer, calibrate, solve_reference)
 from repro.core.placement import (PlacementConfig, PlacementManager,
@@ -33,4 +37,6 @@ __all__ = [
     "QueueConfig", "order_queue", "order_queue_fcfs", "BaselineScheduler",
     "GimbalScheduler", "SchedulerConfig", "EngineTrace", "PrefixSummary",
     "PrefixSummaryDelta", "diff_prefix_summary", "TraceTable",
+    "P2Quantile", "ReservoirQuantile", "StreamingStat", "StreamingMetrics",
+    "WindowedSeries", "merged_quantile",
 ]

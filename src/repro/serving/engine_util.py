@@ -54,26 +54,61 @@ class PrefixSummaryShipper:
     dropped report) cannot break the version chain — the next delivered
     delta still applies to the table's stored base. The shipper re-bases
     (ships a fresh full digest) once the delta outgrows half the digest,
-    bounding steady-state delta size."""
+    bounding steady-state delta size.
+
+    When the pool exposes ``consume_summary_changes`` (the incremental
+    radix digest), the shipper accumulates the changed-key set since the
+    last re-base and builds deltas by probing only those keys —
+    O(changes) per trace instead of an O(digest) full diff, which is what
+    keeps million-request session workloads (trees with thousands of
+    distinct root prompts, mutating every trace) from going quadratic."""
 
     def __init__(self, pool):
         self.pool = pool
         self._cached = None       # last computed full digest
         self._base = None         # last FULL digest shipped (delta base)
+        # agg keys changed since the last re-base; None = pool has no
+        # changelog, fall back to full diffs
+        self._changed = set() \
+            if hasattr(pool, "consume_summary_changes") else None
 
     def emit(self, full: bool = False):
         if self._cached is None \
                 or self._cached.version != self.pool.summary_version:
             self._cached = self.pool.prefix_summary()
+            if self._changed is not None:
+                self._changed |= self.pool.consume_summary_changes()
         cur = self._cached
         if full or self._base is None:
             self._base = cur
+            if self._changed is not None:
+                self._changed = set()
             return cur
-        from repro.core.traces import diff_prefix_summary
-        delta = diff_prefix_summary(self._base, cur)
+        from repro.core.traces import (PrefixSummaryDelta,
+                                       diff_prefix_summary)
+        if self._changed is None:
+            delta = diff_prefix_summary(self._base, cur)
+        else:
+            base_e, cur_e = self._base.entries, cur.entries
+            updates, removed = {}, []
+            for k in self._changed:
+                v = cur_e.get(k)
+                if v is None:
+                    if k in base_e:
+                        removed.append(k)
+                elif base_e.get(k) != v:
+                    updates[k] = v
+            delta = PrefixSummaryDelta(block_size=cur.block_size,
+                                       base_version=self._base.version,
+                                       version=cur.version,
+                                       updates=updates,
+                                       removed=tuple(removed),
+                                       indexed_tokens=cur.indexed_tokens)
         if 2 * (len(delta.updates) + len(delta.removed)) \
                 > max(len(cur.entries), 1):
             self._base = cur      # re-base: the delta is no longer cheap
+            if self._changed is not None:
+                self._changed = set()
             return cur
         return delta
 

@@ -31,6 +31,12 @@ from repro.serving.kvcache import BlockPool
 
 GARBAGE_PAGE = 0
 
+# radix fanout past which a node gets a first-token child index
+# (_RadixNode.child_idx): below this, the linear scan is cheaper than
+# dict upkeep; above it — the root of a many-session cache — the scan
+# is the dominant cost of every match/register walk
+_INDEX_FANOUT = 16
+
 
 class PagedBlockAllocator(BlockPool):
     """BlockPool accounting + physical page ids + per-request block tables."""
@@ -116,7 +122,7 @@ class _RadixNode:
     """
 
     __slots__ = ("tokens", "page", "depth", "parent", "children",
-                 "expires_at")
+                 "expires_at", "child_idx")
 
     def __init__(self, tokens: List[int], page: int, depth: int,
                  parent: Optional["_RadixNode"],
@@ -129,6 +135,12 @@ class _RadixNode:
         # TTL policy for finish-time decode-token registrations: None
         # means the entry never expires (the default for prompt pages)
         self.expires_at = expires_at
+        # lazy first-token -> children index, built once fanout crosses
+        # _INDEX_FANOUT (the root of a many-session cache has thousands
+        # of children; cp > 0 requires tokens[0] to match, so bucketing
+        # by first token is exact and turns the O(children) scan into a
+        # dict hit)
+        self.child_idx: Optional[Dict[int, List["_RadixNode"]]] = None
 
     @property
     def end(self) -> int:
@@ -189,6 +201,20 @@ class SharedPagedAllocator(PagedBlockAllocator):
         # so engines can ship cheap deltas between unchanged versions and
         # the trace table can validate delta chains (core/traces.py).
         self.summary_version = 0
+        # incremental summary state: per-root-child digest memo keyed by
+        # node identity, with mutated subtrees dirty-marked at the two
+        # tree-shape mutation sites. prefix_summary() re-walks only the
+        # dirty subtrees and folds their diff into a maintained aggregate
+        # — O(changes), not O(cache), per trace under heavy churn
+        # (session workloads). _summary_keys tracks which root children
+        # contribute each digest key so removals re-derive the max
+        # correctly even under (rare) fingerprint collisions.
+        self._summary_memo: Dict[int, Tuple[Dict[int, int], int]] = {}
+        self._summary_dirty: Dict[int, _RadixNode] = {}
+        self._summary_keys: Dict[int, Dict[int, int]] = {}
+        self._summary_agg: Dict[int, int] = {}
+        self._summary_total = 0
+        self._summary_changed: set = set()
 
     # ---- tree walking ----------------------------------------------------
     def _best_child(self, node: _RadixNode, tokens: Sequence,
@@ -198,8 +224,16 @@ class SharedPagedAllocator(PagedBlockAllocator):
         continuations register side by side instead of splitting, since a
         node owns exactly one physical page), so this scans; first
         strictly-longer match wins, which keeps the walk deterministic."""
+        cands = node.children
+        if len(cands) > _INDEX_FANOUT:
+            if node.child_idx is None:
+                idx: Dict[int, List[_RadixNode]] = {}
+                for c in cands:
+                    idx.setdefault(c.tokens[0], []).append(c)
+                node.child_idx = idx
+            cands = node.child_idx.get(tokens[d], ())
         best, best_cp = None, 0
-        for c in node.children:
+        for c in cands:
             cp = _common_prefix(c.tokens, tokens[d:d + len(c.tokens)])
             if cp > best_cp:
                 best, best_cp = c, cp
@@ -212,7 +246,18 @@ class SharedPagedAllocator(PagedBlockAllocator):
         free list; live descendant pages stay owned by their requests and
         simply stop being matchable — nothing cached is ever stranded
         unreachable behind an evicted interior node."""
+        if node.parent is self._root:      # whole top-level digest gone
+            self._summary_apply(id(node), {}, 0)
+            self._summary_dirty.pop(id(node), None)
+        else:
+            self._summary_touch(node.parent)
         node.parent.children.remove(node)
+        idx = node.parent.child_idx
+        if idx is not None:
+            bucket = idx[node.tokens[0]]
+            bucket.remove(node)
+            if not bucket:
+                del idx[node.tokens[0]]
         self.summary_version += 1
         stack = [node]
         while stack:
@@ -388,7 +433,10 @@ class SharedPagedAllocator(PagedBlockAllocator):
                 break        # already indexed under another span
             new = _RadixNode(span, page, d, node, expires_at=expires_at)
             node.children.append(new)
+            if node.child_idx is not None:
+                node.child_idx.setdefault(span[0], []).append(new)
             self._page_node[page] = new
+            self._summary_touch(new)
             self.summary_version += 1
             node = new
             d = end
@@ -462,6 +510,52 @@ class SharedPagedAllocator(PagedBlockAllocator):
         """Distinct physical pages currently backing live block tables."""
         return self.n_pages - len(self._free_ids) - len(self._cached)
 
+    def _summary_touch(self, node: _RadixNode) -> None:
+        """Dirty-mark the top-level subtree containing ``node``: its memoized
+        digest is stale and will be re-walked on the next summary build."""
+        while node.parent is not self._root:
+            node = node.parent
+        self._summary_dirty[id(node)] = node
+
+    def _summary_apply(self, rid: int, sub: Dict[int, int],
+                       total: int) -> None:
+        """Replace root-child ``rid``'s contribution to the aggregate
+        digest with ``(sub, total)`` (empty = remove it entirely)."""
+        old_sub, old_t = self._summary_memo.pop(rid, ({}, 0))
+        self._summary_total += total - old_t
+        changed = self._summary_changed
+        for k in old_sub:
+            owners = self._summary_keys.get(k)
+            if owners is None:
+                continue
+            owners.pop(rid, None)
+            if owners:
+                m = max(owners.values())
+                if self._summary_agg.get(k) != m:
+                    self._summary_agg[k] = m
+                    changed.add(k)
+            else:
+                del self._summary_keys[k]
+                self._summary_agg.pop(k, None)
+                changed.add(k)
+        for k, v in sub.items():
+            self._summary_keys.setdefault(k, {})[rid] = v
+            if v > self._summary_agg.get(k, -1):
+                self._summary_agg[k] = v
+                changed.add(k)
+        if sub or total:
+            self._summary_memo[rid] = (sub, total)
+
+    def consume_summary_changes(self) -> set:
+        """Drain the set of digest keys whose aggregate entry changed
+        since the last drain. Single-consumer by design: the engine's
+        :class:`~repro.serving.engine_util.PrefixSummaryShipper` uses it
+        to build deltas in O(changes) instead of re-diffing the full
+        digest every trace. Call after :meth:`prefix_summary` (which
+        flushes pending dirty subtrees into the aggregate)."""
+        changed, self._summary_changed = self._summary_changed, set()
+        return changed
+
     def _summary_dfs(self, node: _RadixNode, acc: Optional[tuple],
                      entries: Dict[int, int]) -> Tuple[int, int]:
         """Accumulate :meth:`prefix_summary` entries: ``acc`` carries the
@@ -492,13 +586,17 @@ class SharedPagedAllocator(PagedBlockAllocator):
         ints per distinct system prompt — cheap enough to ride every
         :class:`~repro.core.traces.EngineTrace`."""
         from repro.core.traces import PrefixSummary
-        entries: Dict[int, int] = {}
-        total = 0
-        for c in self._root.children:
-            _, t = self._summary_dfs(c, (), entries)
-            total += t
-        return PrefixSummary(block_size=self.block_size, entries=entries,
-                             indexed_tokens=total,
+        if self._summary_dirty:
+            dirty, self._summary_dirty = self._summary_dirty, {}
+            for rid, node in dirty.items():
+                if node.parent is not self._root:
+                    continue               # evicted (already subtracted)
+                sub: Dict[int, int] = {}
+                _, t = self._summary_dfs(node, (), sub)
+                self._summary_apply(rid, sub, t)
+        return PrefixSummary(block_size=self.block_size,
+                             entries=dict(self._summary_agg),
+                             indexed_tokens=self._summary_total,
                              version=self.summary_version)
 
     def check_invariants(self) -> None:
@@ -531,6 +629,14 @@ class SharedPagedAllocator(PagedBlockAllocator):
         stack = [self._root]
         while stack:
             n = stack.pop()
+            if n.child_idx is not None:
+                # the first-token index must be exactly the children list,
+                # bucketed — a missed maintenance hook would silently hide
+                # cached prefixes from every subsequent match
+                rebuilt: Dict[int, List[_RadixNode]] = {}
+                for c in n.children:
+                    rebuilt.setdefault(c.tokens[0], []).append(c)
+                assert n.child_idx == rebuilt, "stale first-token index"
             for c in n.children:
                 assert c.parent is n, "broken parent link"
                 assert c.depth == n.end, "non-contiguous child depth"
@@ -545,3 +651,14 @@ class SharedPagedAllocator(PagedBlockAllocator):
         assert cs <= set(seen), "cached page not indexed"
         assert not (set(seen) & fs), "indexed page on the free list"
         assert 0.0 <= self.usage <= 1.0
+        # the incremental (memoized) prefix digest must equal a fresh
+        # full-tree walk — a missed dirty-mark would silently feed the
+        # scheduler stale affinity depths
+        fresh: Dict[int, int] = {}
+        fresh_total = 0
+        for c in self._root.children:
+            _, t = self._summary_dfs(c, (), fresh)
+            fresh_total += t
+        summ = self.prefix_summary()
+        assert summ.entries == fresh and summ.indexed_tokens == fresh_total, \
+            "memoized prefix summary diverged from the tree"

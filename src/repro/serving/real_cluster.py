@@ -124,13 +124,15 @@ def _restore_cluster_state(path: str, sched, coord,
 
 
 def serve_real_cluster(requests: List[Request], engines, *,
-                       cluster_cfg: Optional[RealClusterConfig] = None
-                       ) -> SimResult:
+                       cluster_cfg: Optional[RealClusterConfig] = None,
+                       metrics=None) -> SimResult:
     """Serve ``requests`` on N real engines under the Gimbal control plane.
 
     Engines must share one model config/params (they are DP replicas).
     Returns a :class:`SimResult` (same metrics surface as the simulator)
-    with cluster signals in ``.signals``.
+    with cluster signals in ``.signals``. ``metrics`` (a
+    ``core.metrics.StreamingMetrics``) is fed every non-error finish as
+    it happens — same streaming-percentile hook as the simulator.
     """
     cc = cluster_cfg or RealClusterConfig()
     mcfg = engines[0].cfg
@@ -225,6 +227,24 @@ def serve_real_cluster(requests: List[Request], engines, *,
             e.engine_id)), now=now)
         if hasattr(sched, "on_trace_refresh"):
             sched.on_trace_refresh(e.engine_id)
+
+    # per-engine drained-finish watermark for the streaming metrics hook
+    # (engine restarts keep their finished list, so watermarks only grow;
+    # min() guards a future engine type that truncates it)
+    fin_seen: Dict[int, int] = {e.engine_id: 0 for e in engines}
+
+    def drain_finishes() -> None:
+        if metrics is None:
+            return
+        for e in engines:
+            fl = getattr(e, "finished", None)
+            if fl is None:
+                continue
+            seen = min(fin_seen[e.engine_id], len(fl))
+            for r in fl[seen:]:
+                if not r.error:
+                    metrics.observe_request(r)
+            fin_seen[e.engine_id] = len(fl)
 
     def progress_marker():
         return (len(pending), len(orphans),
@@ -370,6 +390,8 @@ def serve_real_cluster(requests: List[Request], engines, *,
                         // max(mcfg.n_moe_layers, 1)
                         // max(mcfg.moe.top_k, 1))
 
+        drain_finishes()
+
         # ---- 5. health: exclude+fence stale engines, rejoin fresh ones ---
         mon.check(now)
 
@@ -415,12 +437,13 @@ def serve_real_cluster(requests: List[Request], engines, *,
         now += cc.dt
         rounds += 1
 
+    drain_finishes()
     # rejected/shed/quarantined requests (error set) must not pollute the
     # latency metrics: their first_token_time may be -1, which would read
     # as a negative TTFT. They stay visible via signals["errors"]/counts.
     res = SimResult(name=f"real_cluster_{cc.dp_scheduler}",
                     requests=[r for r in requests if not r.error],
-                    duration_s=now)
+                    duration_s=now, engines=list(engines))
     errors = {r.req_id: r.error for r in requests if r.error}
     res.signals = {
         "rounds": rounds,
@@ -513,4 +536,6 @@ def serve_real_cluster(requests: List[Request], engines, *,
                                         and not r.error)
                        for e in engines},
     }
+    if metrics is not None:
+        res.signals["metrics"] = metrics.snapshot()
     return res

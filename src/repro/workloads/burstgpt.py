@@ -25,7 +25,15 @@ def _lengths(dist: str, n: int, rng: np.random.Generator) -> np.ndarray:
     elif dist == "central":
         x = rng.normal(loc=1800, scale=450, size=n)
     elif dist == "descending":
-        x = np.sort(rng.lognormal(6.8, 1.2, size=n))[::-1]
+        # Determinism note: "descending" couples every request's length to
+        # the WHOLE draw vector (request i gets the i-th largest of n
+        # samples), so unlike the other distributions the per-request
+        # lengths are only reproducible for the same (seed, n) pair —
+        # truncating a trace is NOT the same as generating a shorter one.
+        # stable sort + copy: a fixed total order (ties included) and a
+        # contiguous array rather than a negative-stride view
+        x = np.sort(rng.lognormal(6.8, 1.2, size=n),
+                    kind="stable")[::-1].copy()
     elif dist == "two_end":
         short = rng.lognormal(4.5, 0.4, size=n)
         long = rng.lognormal(8.0, 0.3, size=n)

@@ -1,0 +1,310 @@
+"""Scenario stress harness: generator properties + the sim<->real gate.
+
+Property tests for the million-request harness inputs — BurstGPT traces
+(seed determinism, monotone arrivals, length bounds, burstiness CV),
+multi-turn sessions (exact-prefix, determinism, turn caps), load-shape
+retiming (monotone, count/duration-preserving, mass placement) — plus
+the scenario invariant pack on small end-to-end sim runs, the headline
+session-vs-oneshot prefix-hit comparison, and the sim<->real
+differential: the same tiny slice served on both planes must finish the
+same requests with the same prefix-hit tokens and the same affinity
+decision counts.
+
+The env-gated stress test at the bottom is the nightly CI lane
+(REPRO_STRESS=1): one registered scenario at 10^5 requests under a
+wall-clock budget, invariant pack on.
+"""
+import dataclasses
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.workloads.burstgpt import (DISTRIBUTIONS, LEN_MAX, LEN_MIN,
+                                      generate_trace)
+from repro.workloads.scenarios import (SCENARIOS, LoadShape, Scenario,
+                                       build_real_slice, get_scenario,
+                                       register_scenario, retime_arrivals,
+                                       run_scenario)
+from repro.workloads.sessions import (SessionConfig, generate_sessions,
+                                      session_stats)
+
+
+def _trace_tuple(reqs):
+    return [(r.prompt_len, r.max_new_tokens, r.arrival_time) for r in reqs]
+
+
+# ------------------------------------------------------- one-shot traces
+@pytest.mark.parametrize("dist", DISTRIBUTIONS)
+def test_trace_bounds_and_monotone_arrivals(dist):
+    reqs = generate_trace(dist, 2000, rps=20.0, seed=3)
+    lens = np.asarray([r.prompt_len for r in reqs])
+    assert lens.min() >= LEN_MIN and lens.max() <= LEN_MAX
+    arr = np.asarray([r.arrival_time for r in reqs])
+    assert arr[0] > 0.0 and (np.diff(arr) >= 0.0).all()
+    assert [r.req_id for r in reqs] == list(range(2000))
+
+
+@pytest.mark.parametrize("dist", ["random", "descending", "two_end"])
+def test_trace_seed_determinism(dist):
+    a = generate_trace(dist, 500, rps=10.0, seed=11, burstiness=2.0)
+    b = generate_trace(dist, 500, rps=10.0, seed=11, burstiness=2.0)
+    assert _trace_tuple(a) == _trace_tuple(b)
+    c = generate_trace(dist, 500, rps=10.0, seed=12, burstiness=2.0)
+    assert _trace_tuple(a) != _trace_tuple(c)
+
+
+def test_descending_is_nonincreasing_and_coupled_to_n():
+    lens = [r.prompt_len for r in generate_trace("descending", 800,
+                                                 rps=10.0, seed=5)]
+    assert all(a >= b for a, b in zip(lens, lens[1:]))
+    # the documented coupling: request i's length is an order statistic of
+    # the WHOLE draw vector, so a truncated long trace differs from a
+    # shorter generation at the same seed
+    short = [r.prompt_len for r in generate_trace("descending", 400,
+                                                  rps=10.0, seed=5)]
+    assert lens[:400] != short
+
+
+@pytest.mark.parametrize("burstiness,cv", [(1.0, 1.0), (2.5, 2.5 ** 0.5)])
+def test_trace_burstiness_cv(burstiness, cv):
+    reqs = generate_trace("random", 30_000, rps=25.0, seed=9,
+                          burstiness=burstiness)
+    gaps = np.diff([0.0] + [r.arrival_time for r in reqs])
+    got = gaps.std() / gaps.mean()
+    assert abs(got - cv) <= 0.08 * cv, (got, cv)
+
+
+# ------------------------------------------------------- session traces
+def _by_session(reqs):
+    out = {}
+    for r in reqs:
+        out.setdefault(r.session_id, []).append(r)
+    for turns in out.values():
+        turns.sort(key=lambda r: r.turn)
+    return out
+
+
+def test_sessions_exact_prefix_property():
+    reqs = generate_sessions(1500, 2.0, SessionConfig(), seed=4)
+    checked = 0
+    for turns in _by_session(reqs).values():
+        for a, b in zip(turns, turns[1:]):
+            assert b.prompt_tokens[:len(a.prompt_tokens)] \
+                == a.prompt_tokens, "turn k is not a prefix of turn k+1"
+            assert b.prompt_len > a.prompt_len
+            checked += 1
+    assert checked > 100        # the property was actually exercised
+
+
+def test_sessions_determinism_and_ids():
+    cfg = SessionConfig(mean_turns=3.0, max_turns=6)
+    a = generate_sessions(800, 2.0, cfg, seed=21)
+    b = generate_sessions(800, 2.0, cfg, seed=21)
+    assert [r.prompt_tokens for r in a] == [r.prompt_tokens for r in b]
+    assert _trace_tuple(a) == _trace_tuple(b)
+    assert [r.req_id for r in a] == list(range(800))
+    c = generate_sessions(800, 2.0, cfg, seed=22, start_id=1000)
+    assert [r.req_id for r in c] == list(range(1000, 1800))
+    assert [r.prompt_tokens for r in a] != [r.prompt_tokens for r in c]
+
+
+def test_sessions_monotone_arrivals_and_turn_caps():
+    cfg = SessionConfig(mean_turns=5.0, max_turns=7, vocab=64)
+    reqs = generate_sessions(1200, 3.0, cfg, seed=8)
+    arr = [r.arrival_time for r in reqs]
+    assert arr == sorted(arr)
+    for turns in _by_session(reqs).values():
+        assert len(turns) <= cfg.max_turns
+        times = [r.arrival_time for r in turns]
+        assert all(t2 > t1 for t1, t2 in zip(times, times[1:]))
+        assert [r.turn for r in turns] == list(range(len(turns)))
+    assert all(0 <= t < cfg.vocab for r in reqs for t in r.prompt_tokens)
+    st = session_stats(reqs)
+    assert st["n_requests"] == 1200 and st["max_turns"] <= 7
+
+
+@pytest.mark.parametrize("fold", [True, False])
+def test_sessions_prompt_growth_accounting(fold):
+    cfg = SessionConfig(fold_assistant=fold, user_tokens=(8, 48))
+    reqs = generate_sessions(600, 2.0, cfg, seed=2)
+    for turns in _by_session(reqs).values():
+        for a, b in zip(turns, turns[1:]):
+            growth = b.prompt_len - a.prompt_len
+            if fold:      # modeled reply (== turn k's output budget) + user
+                growth -= a.max_new_tokens
+            assert cfg.user_tokens[0] <= growth <= cfg.user_tokens[1]
+
+
+# ------------------------------------------------------- load shapes
+def test_retime_preserves_count_duration_monotone():
+    arr = np.cumsum(np.random.default_rng(0).exponential(0.05, 5000))
+    for kind in ("ramp", "diurnal", "zipf_burst"):
+        out = retime_arrivals(arr, LoadShape(kind=kind), seed=3)
+        assert out.size == arr.size
+        assert (np.diff(out) >= -1e-12).all(), kind
+        assert out[-1] == pytest.approx(arr[-1]), kind
+        assert out[0] >= 0.0
+        same = retime_arrivals(arr, LoadShape(kind=kind), seed=3)
+        assert np.array_equal(out, same), f"{kind} retime not deterministic"
+    assert retime_arrivals(arr, LoadShape(kind="constant")) is arr
+
+
+def test_ramp_shifts_mass_later():
+    arr = np.cumsum(np.random.default_rng(1).exponential(0.05, 20_000))
+    up = retime_arrivals(arr, LoadShape(kind="ramp", lo=0.4, hi=1.6))
+    # rising rate => arrivals concentrate late: the median moves right
+    assert np.median(up) > np.median(arr) * 1.05
+
+
+def test_diurnal_rate_tracks_the_sine():
+    arr = np.cumsum(np.full(200_000, 0.01))
+    out = retime_arrivals(arr, LoadShape(kind="diurnal", amplitude=0.5,
+                                         cycles=1.0))
+    T = out[-1]
+    first, second = (out < 0.5 * T).sum(), (out >= 0.5 * T).sum()
+    # one full sine cycle: positive half-wave first => more than half the
+    # arrivals land in the first half of the run (ratio (pi+1)/(pi-1))
+    assert first / max(second, 1) > 1.5, (first, second)
+
+
+def test_unknown_shape_rejected():
+    with pytest.raises(ValueError):
+        LoadShape(kind="nope").profile(np.linspace(0, 1, 8),
+                                       np.random.default_rng(0))
+
+
+# ------------------------------------------------------- registry + slices
+def test_scenario_registry():
+    assert len(SCENARIOS) >= 5
+    assert sum(1 for s in SCENARIOS.values() if s.kind == "session") >= 1
+    assert get_scenario("agentic_sessions").prefix_sharing
+    with pytest.raises(KeyError):
+        get_scenario("no_such_scenario")
+    with pytest.raises(AssertionError):
+        register_scenario(Scenario(name="ramp_random"))
+
+
+@pytest.mark.parametrize("name", ["agentic_sessions", "ramp_random"])
+def test_real_slice_respects_caps(name):
+    reqs = build_real_slice(SCENARIOS[name], 60, seed=1, vocab=128,
+                            max_prompt=48)
+    assert len(reqs) == 60
+    for r in reqs:
+        assert 0 < r.prompt_len <= 48
+        assert len(r.prompt_tokens) == r.prompt_len
+        assert all(0 <= t < 128 for t in r.prompt_tokens)
+    arr = [r.arrival_time for r in reqs]
+    assert arr == sorted(arr)
+    again = build_real_slice(SCENARIOS[name], 60, seed=1, vocab=128,
+                             max_prompt=48)
+    assert [r.prompt_tokens for r in reqs] \
+        == [r.prompt_tokens for r in again]
+
+
+# ------------------------------------------------------- sim end-to-end
+def test_run_scenario_invariant_pack_smoke():
+    dash, res = run_scenario(SCENARIOS["ramp_random"], 400, seed=3)
+    assert dash["invariants_ok"] and dash["n_requests"] == 400
+    assert dash["invariants"]["n_requests"] == 400
+    assert dash["latency"]["ttft"]["count"] == 400
+    assert dash["latency"]["ttft"]["p50"] <= dash["latency"]["ttft"]["p99"]
+    assert res.duration_s >= dash["invariants"]["max_finish_s"]
+
+
+def test_session_scenario_out_hits_oneshot():
+    hit = {}
+    for name in ("agentic_sessions", "chat_oneshot"):
+        dash, _ = run_scenario(SCENARIOS[name], 1200, seed=7)
+        hit[name] = dash["cache"]["hit_rate"]
+        assert dash["invariants_ok"]
+    assert hit["agentic_sessions"] > hit["chat_oneshot"] + 0.3, hit
+
+
+# ------------------------------------------------------- sim<->real gate
+@pytest.mark.slow
+def test_sim_real_differential(tiny_model, shared_runner):
+    """The same tiny session slice on both planes: identical finish sets,
+    identical prefix-hit token totals, identical affinity decision
+    counts, invariant pack green on both. ``fold_assistant=False`` keeps
+    the two planes' radix trees token-identical (the sim plane cannot
+    know real sampled tokens)."""
+    from repro.core import SchedulerConfig
+    from repro.core.metrics import StreamingMetrics
+    from repro.serving import (EngineConfig, PagedRealEngine,
+                               RealClusterConfig, serve_real_cluster)
+    from repro.serving.simulator import SystemConfig, simulate
+    from repro.workloads.scenarios import check_scenario_invariants
+
+    cfg, params = tiny_model
+    ecfg = dataclasses.replace(shared_runner.ecfg, prefix_sharing=True)
+    max_prompt = ecfg.max_blocks_per_req * ecfg.page_size - 16
+
+    def mk():
+        reqs = build_real_slice(
+            SCENARIOS["agentic_sessions"], 10, seed=13,
+            vocab=cfg.vocab_size, max_prompt=max_prompt, rps=0.25,
+            fold_assistant=False)
+        # strictly sequential arrivals (far beyond the real plane's
+        # ~0.6s virtual service): every turn sees the previous turn
+        # finished AND registered on both planes, so cache decisions
+        # depend only on tokens — the thing the gate compares — and not
+        # on the planes' (intentionally different) service-time models
+        for i, r in enumerate(reqs):
+            r.arrival_time = 3.0 * (i + 1)
+        return reqs
+
+    # ---- real plane
+    engines = [PagedRealEngine(i, cfg, params, ecfg, runner=shared_runner,
+                               n_sources=2) for i in range(2)]
+    real_reqs = mk()
+    rmetrics = StreamingMetrics(window_s=5.0, seed=0)
+    rres = serve_real_cluster(
+        real_reqs, engines,
+        cluster_cfg=RealClusterConfig(
+            window_tokens=200, scheduler_cfg=SchedulerConfig()),
+        metrics=rmetrics)
+    rinv = check_scenario_invariants(real_reqs, rres, engines=engines,
+                                     metrics=rmetrics)
+
+    # ---- sim plane, same slice
+    sim_reqs = mk()
+    assert [r.prompt_tokens for r in sim_reqs] \
+        == [r.prompt_tokens for r in real_reqs]      # shared input proven
+    smetrics = StreamingMetrics(window_s=5.0, seed=0)
+    sres = simulate(sim_reqs,
+                    SystemConfig(name="diff_sim", n_engines=2,
+                                 n_moe_layers=4, n_experts=16, top_k=2),
+                    engine_cfg=EngineConfig(kv_tokens=4096, kv_block=8,
+                                            prefix_sharing=True),
+                    traffic_seed=0, metrics=smetrics)
+    sinv = check_scenario_invariants(sim_reqs, sres, engines=sres.engines,
+                                     metrics=smetrics)
+
+    # the gate: both planes served the same set, cached the same tokens,
+    # and took the affinity path the same number of times
+    assert sorted(r.req_id for r in real_reqs) \
+        == sorted(r.req_id for r in sim_reqs)
+    assert rinv["prefix_hit_tokens"] == sinv["prefix_hit_tokens"] > 0, \
+        (rinv["prefix_hit_tokens"], sinv["prefix_hit_tokens"])
+    rdec = rres.signals["decisions"]
+    sdec = sres.signals["decisions"]
+    assert rdec.get("affinity_path", 0) == sdec.get("affinity_path", 0) > 0
+    assert rinv["hit_rate"] == pytest.approx(sinv["hit_rate"])
+
+
+# ------------------------------------------------------- nightly lane
+@pytest.mark.slow
+@pytest.mark.stress
+@pytest.mark.skipif(os.environ.get("REPRO_STRESS") != "1",
+                    reason="nightly stress lane: set REPRO_STRESS=1")
+def test_stress_scenario_under_budget():
+    n = int(os.environ.get("REPRO_STRESS_REQUESTS", "100000"))
+    budget = float(os.environ.get("REPRO_STRESS_BUDGET_S", "1200"))
+    t0 = time.perf_counter()
+    dash, _ = run_scenario(SCENARIOS["agentic_sessions"], n, seed=7)
+    wall = time.perf_counter() - t0
+    assert dash["invariants_ok"] and dash["n_requests"] == n
+    assert dash["cache"]["hit_rate"] > 0.3
+    assert wall <= budget, f"stress run took {wall:.0f}s > {budget:.0f}s"
