@@ -11,7 +11,8 @@ bench on reduced grids (CPU) and writes
 ``BENCH_paged_serving.json`` + ``BENCH_prefix_sharing.json`` +
 ``BENCH_prefix_affinity.json`` + ``BENCH_batched_prefill.json`` +
 ``BENCH_mixed_step.json`` + ``BENCH_fault_recovery.json`` +
-``BENCH_kv_tier.json`` — the perf-trajectory tracking entry points for
+``BENCH_kv_tier.json`` + ``BENCH_predictive_placement.json`` — the
+perf-trajectory tracking entry points for
 CI. The affinity bench asserts ``affinity_hit_rate > 0`` and bit-exact
 outputs; the batched-prefill bench asserts bit-exact outputs with >= 2x
 fewer prefill dispatches; the mixed-step bench asserts bit-exact
@@ -24,9 +25,14 @@ equal bytes, and the measured cost model beats both fixed preemption
 policies; the scenario stress bench (``BENCH_scenarios.json``) serves
 every registered scenario with the full invariant pack on and asserts
 the multi-turn session scenario out-hits its one-shot counterpart on
-both planes — so a regression in the radix cache, the affinity signal,
-the StepPlanner lane fusion, the mixed fused steps, the crash-recovery
-path, the KV tier or the scenario harness fails the smoke lane fast.
+both planes; the predictive-placement bench runs the zipf_shift
+routing-drift scenario and asserts forecast+prefetch strictly beats
+reactive placement on modeled TTFT and SLO goodput with zero
+serving-path migration stalls (``migrations_hidden > 0``) and that a
+horizon-0 forecaster bit-reproduces the reactive system — so a
+regression in the radix cache, the affinity signal, the StepPlanner
+lane fusion, the mixed fused steps, the crash-recovery path, the KV
+tier, the forecaster or the scenario harness fails the smoke lane fast.
 """
 from __future__ import annotations
 
@@ -53,6 +59,7 @@ MODULES = [
     "benchmarks.fig_fault_recovery",
     "benchmarks.fig_kv_tier",
     "benchmarks.fig_scenarios",
+    "benchmarks.fig_predictive_placement",
     "benchmarks.roofline_table",
 ]
 
@@ -64,7 +71,8 @@ SMOKE_MODULES = ["benchmarks.fig_ragged_dispatch",
                  "benchmarks.fig_mixed_step",
                  "benchmarks.fig_fault_recovery",
                  "benchmarks.fig_kv_tier",
-                 "benchmarks.fig_scenarios"]
+                 "benchmarks.fig_scenarios",
+                 "benchmarks.fig_predictive_placement"]
 
 
 def main() -> None:

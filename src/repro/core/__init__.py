@@ -5,11 +5,14 @@
 - queue_policy: SJF-with-aging intra-engine ordering, Algorithm 2 (§4.4)
 - profiler:    online B[l,e] / A[l,s,e] expert-traffic statistics (§5.1)
 - placement:   source-aware greedy expert placement (§5.2-5.3)
+- forecast:    online source→expert traffic forecasting + prefetch pricing
 - minlp:       offline placement reference + (beta, gamma) calibration (§6)
 - coordinator: the cross-level feedback loop (§3)
 - metrics:     O(1)-memory streaming latency percentiles (stress harness)
 """
 from repro.core.coordinator import CoordinatorConfig, GimbalCoordinator
+from repro.core.forecast import (ExpertTrafficForecaster, ForecastConfig,
+                                 PrefetchConfig, PrefetchCostModel)
 from repro.core.metrics import (P2Quantile, ReservoirQuantile, StreamingStat,
                                 StreamingMetrics, WindowedSeries,
                                 merged_quantile)
@@ -29,7 +32,9 @@ from repro.core.traces import (EngineTrace, PrefixSummary,
                                diff_prefix_summary)
 
 __all__ = [
-    "CoordinatorConfig", "GimbalCoordinator", "CalibrationResult",
+    "CoordinatorConfig", "GimbalCoordinator",
+    "ExpertTrafficForecaster", "ForecastConfig",
+    "PrefetchConfig", "PrefetchCostModel", "CalibrationResult",
     "anneal_layer", "brute_force_layer", "calibrate", "solve_reference",
     "PlacementConfig", "PlacementManager", "assignment_to_permutation",
     "default_distance_matrix", "greedy_layer_placement", "layer_objective",

@@ -15,6 +15,8 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.forecast import (ExpertTrafficForecaster, ForecastConfig,
+                                 PrefetchConfig, PrefetchCostModel)
 from repro.core.placement import PlacementConfig, PlacementManager
 from repro.core.profiler import ExpertProfiler
 from repro.core.traces import TraceTable
@@ -32,6 +34,18 @@ class CoordinatorConfig:
     migration_per_move_s: float = 1.04e-4   # 0.72s at a full 48x128 reshuffle
     migration_warmup_s: float = 0.36        # first rearrangement extra
     moe_pressure_norm: float = 2000.0   # token-equivalents at 100% excess
+    # ---- predictive placement (ROADMAP: forecast + prefetch) -------------
+    # predictive: rebalance against the forecaster's next-window (B̂, Â)
+    # instead of the window just observed. prefetch: on a placement flip,
+    # copy the moving experts' weights to their targets ASYNCHRONOUSLY
+    # (overlapped with serving, priced by PrefetchCostModel) and commit
+    # the placement pointer only once the copy lands — migration stops
+    # costing serving-path wall time (``migrations_hidden``).
+    predictive: bool = False
+    prefetch: bool = False
+    forecast_cfg: Optional[ForecastConfig] = None   # None -> ForecastConfig()
+    prefetch_cfg: Optional[PrefetchConfig] = None   # None -> PrefetchConfig()
+    flip_s: float = 0.0                 # serving-path cost of a landed flip
 
 
 class GimbalCoordinator:
@@ -52,6 +66,23 @@ class GimbalCoordinator:
         self._migrated_once = False
         self._last_rank_load = np.zeros((max(n_moe_layers, 1), n_ranks))
         self.migration_log: List[Dict] = []
+        # ---- predictive placement state ---------------------------------
+        self.forecaster = ExpertTrafficForecaster(
+            n_moe_layers, n_experts, n_engines,
+            cfg=self.cfg.forecast_cfg) if self.cfg.predictive else None
+        self.prefetch_cost = PrefetchCostModel(self.cfg.prefetch_cfg) \
+            if self.cfg.prefetch else None
+        # callback when a prefetch is staged: (plan, target_perms) — the
+        # real plane starts the double-buffered weight copy here
+        self.on_prefetch: Optional[Callable] = None
+        self._pending: Optional[Dict] = None    # staged, un-landed flip
+        self._last_B = np.zeros((max(n_moe_layers, 1), n_experts))
+        self.prefetch_hits = 0          # staged placements that flipped
+        self.prefetch_misses = 0        # staged placements superseded
+        self.prefetch_bytes = 0.0
+        self.migrations_hidden = 0      # expert moves applied via prefetch
+        self.sync_migrations = 0        # rebalances paid on the serving path
+        self.sync_stall_s = 0.0         # serving-path migration wall time
 
     # ---- rank <-> engine co-location (DP+TP+EP share physical chips) ---
     def ranks_of_engine(self, engine_id: int) -> List[int]:
@@ -61,29 +92,110 @@ class GimbalCoordinator:
 
     # ---- window lifecycle ----------------------------------------------
     def maybe_rebalance(self, now: float = 0.0) -> Tuple[bool, float]:
-        """If the window is full: snapshot, rebalance, migrate.
-        Returns (migrated, migration_seconds)."""
+        """If the window is full: snapshot, (forecast,) rebalance, migrate.
+        Returns (migrated, serving-path migration seconds).
+
+        Predictive mode feeds the forecaster's next-window (B̂, Â) into the
+        placement heuristic instead of the window just observed (horizon 0
+        passes the observed arrays through untouched, so decisions
+        bit-reproduce the reactive pipeline). With prefetch on, a placement
+        change is only STAGED here — (False, 0.0) is returned, the moving
+        experts' weights start copying asynchronously, and the caller's
+        :meth:`poll_prefetch` commits the flip once the copy lands."""
         if self.profiler.window_tokens < self.cfg.window_tokens:
             return False, 0.0
         B, A = self.profiler.snapshot(reset=True)
+        self._last_B = B.astype(np.float64)
         if not self.cfg.rebalance:
-            self._last_rank_load = self.placement.per_rank_load(
-                B.astype(np.float64))
+            self._last_rank_load = self.placement.per_rank_load(self._last_B)
             return False, 0.0
-        plan = self.placement.update(B, A)
+        Bp, Ap = B, A
+        if self.forecaster is not None:
+            self.forecaster.observe(B, A)
+            Bp, Ap = self.forecaster.predict(B, A)
+
+        if self.prefetch_cost is not None:
+            new_assign, plan = self.placement.solve(Bp, Ap)
+            # until the flip lands, this window's traffic keeps hitting the
+            # CURRENT placement — pressure signals must reflect that
+            self._last_rank_load = self.placement.per_rank_load(self._last_B)
+            if not plan:
+                if self._pending is not None:
+                    # the fresh forecast says "stay put": the in-flight
+                    # prefetch is stale — drop it (bytes already wasted)
+                    self.prefetch_misses += 1
+                    self._pending = None
+                return False, 0.0
+            if self._pending is not None:
+                if np.array_equal(self._pending["assign"], new_assign):
+                    return False, 0.0   # same target, copy already in flight
+                self.prefetch_misses += 1
+            nbytes = self.prefetch_cost.bytes_for(len(plan))
+            self.prefetch_bytes += nbytes
+            self._pending = {
+                "assign": new_assign, "plan": plan, "B": B,
+                "ready": now + self.prefetch_cost.duration(nbytes)}
+            if self.on_prefetch is not None:
+                self.on_prefetch(
+                    plan, self.placement.permutations_of(new_assign))
+            return False, 0.0
+
+        plan = self.placement.update(Bp, Ap)
         # pressure signals reflect the window's traffic under the placement
         # that will serve the NEXT window
-        self._last_rank_load = self.placement.per_rank_load(
-            B.astype(np.float64))
+        self._last_rank_load = self.placement.per_rank_load(self._last_B)
         if not plan:
             return False, 0.0
         dur = self.migration_duration(len(plan))
         self._migrated_once = True
+        self.sync_migrations += 1
+        self.sync_stall_s += dur
         self.migration_log.append(
             {"t": now, "moves": len(plan), "duration_s": dur})
         if self.on_migration is not None:
             self.on_migration(plan, self.placement.permutations())
         return True, dur
+
+    def poll_prefetch(self, now: float) -> int:
+        """Commit a staged placement whose weight prefetch has landed:
+        the pointer flip. Returns the number of expert moves applied
+        (0 when nothing is pending or the copy is still in flight) —
+        these moves never stalled the serving path."""
+        p = self._pending
+        if p is None or now + 1e-12 < p["ready"]:
+            return 0
+        plan = self.placement.commit(p["assign"], p["plan"], p["B"])
+        self._pending = None
+        self._migrated_once = True
+        self.prefetch_hits += 1
+        self.migrations_hidden += len(plan)
+        self._last_rank_load = self.placement.per_rank_load(self._last_B)
+        self.migration_log.append(
+            {"t": now, "moves": len(plan), "duration_s": self.cfg.flip_s,
+             "hidden": True})
+        if self.on_migration is not None:
+            self.on_migration(plan, self.placement.permutations())
+        return len(plan)
+
+    def placement_signals(self) -> Dict:
+        """Placement/forecast/prefetch telemetry for cluster signals —
+        migration activity used to be invisible outside the coordinator."""
+        f = self.forecaster
+        return {
+            "n_rebalances": self.placement.n_rebalances,
+            "n_migrations": self.placement.n_migrations,
+            "sync_migrations": self.sync_migrations,
+            "sync_migration_stall_s": self.sync_stall_s,
+            "migrations_hidden": self.migrations_hidden,
+            "prefetch_hits": self.prefetch_hits,
+            "prefetch_misses": self.prefetch_misses,
+            "prefetch_bytes": self.prefetch_bytes,
+            "prefetch_pending": int(self._pending is not None),
+            "forecast_mae": f.forecast_mae if f else 0.0,
+            "forecast_naive_mae": f.naive_mae if f else 0.0,
+            "forecast_windows": f.n_windows if f else 0,
+            "forecast_fallbacks": f.fallback_windows if f else 0,
+        }
 
     def migration_duration(self, n_moves: int) -> float:
         dur = self.cfg.migration_base_s \

@@ -184,6 +184,16 @@ class PlacementManager:
     def update(self, B: np.ndarray, A: np.ndarray) -> List[Tuple[int, int, int, int]]:
         """End-of-window rebalance. Returns migration plan
         [(layer, expert, from_rank, to_rank), ...]."""
+        new_assign, plan = self.solve(B, A)
+        return self.commit(new_assign, plan, B)
+
+    def solve(self, B: np.ndarray, A: np.ndarray
+              ) -> Tuple[np.ndarray, List[Tuple[int, int, int, int]]]:
+        """Pure decision half of :meth:`update`: the placement the window's
+        (or forecast) load calls for, WITHOUT committing it. Returns
+        ``(new_assign (L, E), plan)`` — the predictive pipeline stages a
+        weight prefetch against this and :meth:`commit`\\ s once it lands."""
+        new_assign = self.assign.copy()
         plan = []
         for l in range(self.L):
             if B[l].sum() == 0:
@@ -193,8 +203,19 @@ class PlacementManager:
             moved = np.flatnonzero(new != self.assign[l])
             for e in moved:
                 plan.append((l, int(e), int(self.assign[l, e]), int(new[e])))
-            self.assign[l] = new
-            if self.R > 0:
+            new_assign[l] = new
+        return new_assign, plan
+
+    def commit(self, new_assign: np.ndarray,
+               plan: List[Tuple[int, int, int, int]],
+               B: np.ndarray) -> List[Tuple[int, int, int, int]]:
+        """Adopt a solved placement (replica re-placement rides along)."""
+        self.assign[:] = new_assign
+        plan = list(plan)
+        if self.R > 0:
+            for l in range(self.L):
+                if B[l].sum() == 0:
+                    continue
                 plan += self._place_replicas(l, B[l])
         if plan:
             self.n_rebalances += 1
@@ -225,7 +246,12 @@ class PlacementManager:
 
     def permutations(self) -> np.ndarray:
         """(L, E) logical->physical slot permutation for the MoE layers."""
-        return np.stack([assignment_to_permutation(self.assign[l], self.G)
+        return self.permutations_of(self.assign)
+
+    def permutations_of(self, assign_stack: np.ndarray) -> np.ndarray:
+        """Permutations for an un-committed assignment stack (the staged
+        placement a prefetch is copying weights for)."""
+        return np.stack([assignment_to_permutation(assign_stack[l], self.G)
                          for l in range(self.L)])
 
     def per_rank_load(self, B: np.ndarray) -> np.ndarray:

@@ -557,6 +557,27 @@ def migrate_params_for_placement(params, cfg, old_placement, new_placement):
     return dict(params, blocks=blocks)
 
 
+def expert_weight_bytes(cfg) -> int:
+    """Bytes of ONE expert's stacked FFN weights (w_gate + w_up + w_down):
+    what an asynchronous prefetch moves per (layer, expert) relocation.
+    Sizes ``PrefetchConfig.bytes_per_expert`` from the real model config."""
+    m = cfg.moe
+    if not m.enabled:
+        return 0
+    return 3 * cfg.d_model * m.d_expert * jnp.dtype(cfg.dtype).itemsize
+
+
+def stage_expert_prefetch(params, cfg, cur_placement, target_placement):
+    """Double-buffered expert-weight prefetch: build the params tree the
+    model will need under ``target_placement`` WITHOUT touching the live
+    ``params`` (``migrate_params_for_placement`` is functional — the staged
+    copy and the serving copy coexist until the pointer flip adopts the
+    staged one). The serving path never blocks on the copy; the flip is a
+    pointer swap."""
+    return migrate_params_for_placement(params, cfg, cur_placement,
+                                        target_placement)
+
+
 def superblock_forward(blk_params, cfg, descs, x, positions, blk_cache,
                        mode, blk_placement, source_ids, n_sources, policy,
                        collect_stats, paged=None):

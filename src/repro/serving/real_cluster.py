@@ -32,6 +32,7 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.core.coordinator import CoordinatorConfig, GimbalCoordinator
+from repro.core.forecast import ForecastConfig, PrefetchConfig
 from repro.core.placement import PlacementConfig
 from repro.core.scheduler import (BaselineScheduler, GimbalScheduler,
                                   SchedulerConfig)
@@ -57,6 +58,16 @@ class RealClusterConfig:
     # rarely migrate; pass e.g. PlacementConfig.uncalibrated() to force
     # rebalancing at small scale (tests/demos)
     placement_cfg: Optional[PlacementConfig] = None
+    # ---- predictive placement (core/forecast.py) -------------------------
+    # predictive: rebalance against the forecaster's next-window traffic.
+    # prefetch: stage the target placement's weights as a DOUBLE BUFFER
+    # (migrate_params_for_placement is functional, so staged and serving
+    # params coexist) and adopt via pointer swap once the modeled copy
+    # lands — the serving path never pays the migration.
+    predictive: bool = False
+    prefetch: bool = False
+    forecast_cfg: Optional[ForecastConfig] = None
+    prefetch_cfg: Optional[PrefetchConfig] = None
     # ---- fault tolerance -------------------------------------------------
     health_cfg: Optional[HealthConfig] = None   # None -> HealthConfig()
     fault_plan: Optional[FaultPlan] = None      # deterministic chaos schedule
@@ -147,10 +158,19 @@ def serve_real_cluster(requests: List[Request], engines, *,
     moe = mcfg.moe.enabled
     coord = None
     if moe:
+        pf_cfg = cc.prefetch_cfg
+        if cc.prefetch and pf_cfg is None:
+            from repro.models.transformer import expert_weight_bytes
+            pf_cfg = PrefetchConfig(
+                bytes_per_expert=float(expert_weight_bytes(mcfg)))
         coord = GimbalCoordinator(
             mcfg.n_moe_layers, mcfg.moe.n_experts, cc.n_ranks, n_engines,
             cfg=CoordinatorConfig(window_tokens=cc.window_tokens,
-                                  feedback=cc.feedback),
+                                  feedback=cc.feedback,
+                                  predictive=cc.predictive,
+                                  prefetch=cc.prefetch,
+                                  forecast_cfg=cc.forecast_cfg,
+                                  prefetch_cfg=pf_cfg),
             placement_cfg=cc.placement_cfg)
     if cc.restore_from:
         _restore_cluster_state(cc.restore_from, sched, coord, table)
@@ -203,12 +223,49 @@ def serve_real_cluster(requests: List[Request], engines, *,
     # stays physical); the controller wires table/scheduler membership only
     ec = ElasticController(table, sched, coordinator=None)
 
+    staged: Optional[Dict] = None      # double-buffered prefetch state
+    pointer_swaps = 0                  # placements adopted without migrating
+
+    def stage_prefetch(plan, target_perms) -> None:
+        """``coord.on_prefetch``: start the asynchronous weight copy — build
+        the params tree every holder will need under the staged placement,
+        next to (not in place of) the live tree. The serving path keeps
+        using the old buffer; :func:`apply_placement` pointer-swaps once
+        the coordinator's modeled transfer lands."""
+        nonlocal staged
+        del plan
+        from repro.models.transformer import stage_expert_prefetch
+        target = np.asarray(target_perms)
+        bufs: Dict[int, object] = {}
+        for e in engines:
+            holder = getattr(e, "runner", e)
+            if id(holder) not in bufs:
+                bufs[id(holder)] = stage_expert_prefetch(
+                    holder.params, mcfg, cur_perms, target)
+        staged = {"perms": target, "base": cur_perms.copy(), "params": bufs}
+
     def apply_placement(new_perms: np.ndarray) -> None:
         """Adopting a placement means MOVING the weights: permute every
         param holder's stacked expert weights (once per holder — paged
-        engines may share one runner), then hand engines the new table."""
-        nonlocal cur_perms
+        engines may share one runner), then hand engines the new table.
+        When a staged prefetch buffer matches the target (and was built
+        against the placement still serving), adoption is a pointer swap."""
+        nonlocal cur_perms, staged, pointer_swaps
         from repro.models.transformer import migrate_params_for_placement
+        if staged is not None and np.array_equal(staged["perms"], new_perms) \
+                and np.array_equal(staged["base"], cur_perms):
+            for e in engines:
+                holder = getattr(e, "runner", e)
+                buf = staged["params"].get(id(holder))
+                holder.params = buf if buf is not None else \
+                    migrate_params_for_placement(
+                        holder.params, mcfg, cur_perms, new_perms)
+                e.placement = new_perms
+            cur_perms = new_perms
+            staged = None
+            pointer_swaps += 1
+            return
+        staged = None              # stale buffer: fall back to a live move
         seen = set()
         for e in engines:
             holder = getattr(e, "runner", e)   # runner (paged) or engine
@@ -218,6 +275,9 @@ def serve_real_cluster(requests: List[Request], engines, *,
                     holder.params, mcfg, cur_perms, new_perms)
             e.placement = new_perms
         cur_perms = new_perms
+
+    if coord is not None and cc.prefetch:
+        coord.on_prefetch = stage_prefetch
 
     def report_trace(e) -> None:
         # delta-based prefix digests: ship a full summary only when the
@@ -399,6 +459,8 @@ def serve_real_cluster(requests: List[Request], engines, *,
             migrated, _dur = coord.maybe_rebalance(now)
             if migrated:
                 migrations += 1
+            if coord.poll_prefetch(now):
+                migrations += 1    # a flip is still a placement adoption
             perms = np.asarray(coord.placement.permutations())
             if not np.array_equal(perms, cur_perms):
                 apply_placement(perms)
@@ -535,7 +597,12 @@ def serve_real_cluster(requests: List[Request], engines, *,
                                         and r.state is RequestState.FINISHED
                                         and not r.error)
                        for e in engines},
+        # placements adopted by pointer swap (prefetched double buffer)
+        # instead of a serving-path weight move
+        "prefetch_pointer_swaps": pointer_swaps,
     }
+    if coord is not None:
+        res.signals.update(coord.placement_signals())
     if metrics is not None:
         res.signals["metrics"] = metrics.snapshot()
     return res

@@ -16,6 +16,7 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.core.coordinator import CoordinatorConfig, GimbalCoordinator
+from repro.core.forecast import ForecastConfig, PrefetchConfig
 from repro.core.placement import PlacementConfig, default_distance_matrix, \
     greedy_layer_placement
 from repro.core.scheduler import (BaselineScheduler, GimbalScheduler,
@@ -45,6 +46,17 @@ class SystemConfig:
     top_k: int = 8
     trace_interval_s: float = 0.05      # async engine-stats reporting period
     window_tokens: int = 40_000
+    # ---- predictive placement (core/forecast.py): rebalance against the
+    # forecast next window; prefetch stages the expert-weight copy off the
+    # serving path and flips only once it lands (no migration stall)
+    predictive: bool = False
+    prefetch: bool = False
+    forecast_cfg: Optional[ForecastConfig] = None
+    prefetch_cfg: Optional[PrefetchConfig] = None
+    # routing non-stationarity fed to SourceExpertTraffic (zipf_shift):
+    # hot-expert set fully rotates every N routed tokens (0 = stationary)
+    routing_shift_tokens: int = 0
+    routing_shift_roll: int = 0         # 0 -> E // 8
 
 
 PAPER_SYSTEMS: Dict[str, SystemConfig] = {
@@ -69,6 +81,13 @@ PAPER_SYSTEMS: Dict[str, SystemConfig] = {
     # beyond-paper: Gimbal + 4 redundant hot-expert replicas per layer
     "gimbal_replicated": SystemConfig(name="gimbal_replicated",
                                       redundant_slots=4),
+    # beyond-paper: predictive placement — forecast next-window traffic,
+    # rebalance toward it; "gimbal_forecast" migrates synchronously (the
+    # prediction-only ablation), "gimbal_predictive" additionally hides
+    # the migration behind an async expert-weight prefetch
+    "gimbal_forecast": SystemConfig(name="gimbal_forecast", predictive=True),
+    "gimbal_predictive": SystemConfig(name="gimbal_predictive",
+                                      predictive=True, prefetch=True),
 }
 
 
@@ -166,7 +185,9 @@ def simulate(requests: List[Request], system: SystemConfig, *,
     ecfg = dataclasses.replace(ecfg, queue_policy=sc.queue_policy)
 
     traffic = SourceExpertTraffic(sc.n_moe_layers, sc.n_experts, sc.n_engines,
-                                  seed=traffic_seed)
+                                  seed=traffic_seed,
+                                  shift_every_tokens=sc.routing_shift_tokens,
+                                  shift_roll=sc.routing_shift_roll)
     engines = [DPEngine(i, ecfg, cost, traffic, sc.top_k)
                for i in range(sc.n_engines)]
     table = TraceTable(range(sc.n_engines))
@@ -186,7 +207,11 @@ def simulate(requests: List[Request], system: SystemConfig, *,
         cfg=CoordinatorConfig(window_tokens=sc.window_tokens,
                               feedback=sc.feedback,
                               rebalance=sc.ep_policy in
-                              ("gimbal", "eplb")),
+                              ("gimbal", "eplb"),
+                              predictive=sc.predictive,
+                              prefetch=sc.prefetch,
+                              forecast_cfg=sc.forecast_cfg,
+                              prefetch_cfg=sc.prefetch_cfg),
         placement_cfg=sc.placement_cfg, D=D,
         redundant_slots=sc.redundant_slots)
     eplb = EPLBPlacementPolicy(coord.placement) if sc.ep_policy == "eplb" \
@@ -361,6 +386,13 @@ def simulate(requests: List[Request], system: SystemConfig, *,
                     coord._last_rank_load = coord.placement.per_rank_load(
                         B.astype(np.float64))
                     refresh_backend_signals()
+            if sc.ep_policy == "gimbal" and coord.poll_prefetch(now):
+                # staged weights landed: pointer flip off the serving path
+                # (flip_s > 0 models a non-free pointer swap)
+                if coord.cfg.flip_s > 0:
+                    migration_until = max(migration_until,
+                                          now + coord.cfg.flip_s)
+                refresh_backend_signals()
             drain_finishes()
             if dur > 0:
                 engine_busy_until[eid] = now + dur
@@ -384,7 +416,9 @@ def simulate(requests: List[Request], system: SystemConfig, *,
         "prefill_lanes_per_dispatch": (
             sum(e.prefill_lanes_total for e in engines)
             / max(sum(e.prefill_dispatches for e in engines), 1)),
+        "routing_shifts": traffic.n_shifts,
     }
+    res.signals.update(coord.placement_signals())
     if metrics is not None:
         res.signals["metrics"] = metrics.snapshot()
     return res

@@ -130,6 +130,10 @@ class Scenario:
     kv_tokens: int = 700_000
     kv_block: int = 16
     prefix_sharing: bool = False
+    # routing non-stationarity: every this-many routed tokens the hot
+    # expert set has fully rotated along the expert axis (0 = stationary;
+    # see routing_sim.SourceExpertTraffic)
+    routing_shift_tokens: int = 0
 
     # ---- builders --------------------------------------------------------
     def build(self, n_requests: int, seed: int = 0) -> List[Request]:
@@ -161,7 +165,8 @@ class Scenario:
         return dataclasses.replace(
             PAPER_SYSTEMS[self.system], n_engines=self.n_engines,
             n_moe_layers=self.n_moe_layers, n_experts=self.n_experts,
-            top_k=self.top_k, window_tokens=self.window_tokens)
+            top_k=self.top_k, window_tokens=self.window_tokens,
+            routing_shift_tokens=self.routing_shift_tokens)
 
     def engine_cfg(self):
         from repro.serving.engine import EngineConfig
@@ -208,6 +213,15 @@ register_scenario(Scenario(
                 "Zipf-magnitude burst windows (BurstGPT burstiness)",
     dist="central", rps=18.0, burstiness=2.5,
     load=LoadShape(kind="zipf_burst", n_bursts=6, burst_x=5.0)))
+
+register_scenario(Scenario(
+    name="zipf_shift",
+    description="central lengths at steady load while the Zipf hot-expert "
+                "set rotates continuously along the expert axis (seeded "
+                "routing drift): reactive placement chases the last "
+                "window, predictive placement aims at the next one",
+    dist="central", rps=20.0, window_tokens=40_000,
+    routing_shift_tokens=80_000))
 
 register_scenario(Scenario(
     name="agentic_sessions",

@@ -1,0 +1,240 @@
+"""Predictive expert placement: forecaster convergence/fallback, horizon-0
+bit-reproduction of the reactive pipeline, prefetch stage->poll->flip
+semantics, and (slow) real-plane token identity of prefetch-then-flip vs
+synchronous weight migration."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (CoordinatorConfig, ExpertTrafficForecaster,
+                        ForecastConfig, GimbalCoordinator, PlacementConfig,
+                        PrefetchConfig, PrefetchCostModel)
+from repro.serving.routing_sim import SourceExpertTraffic
+
+L, E, S = 4, 16, 2
+
+
+def _coord(**kw):
+    return GimbalCoordinator(
+        n_moe_layers=L, n_experts=E, n_ranks=4, n_engines=S,
+        cfg=CoordinatorConfig(window_tokens=100, **kw),
+        placement_cfg=PlacementConfig.uncalibrated())
+
+
+def _window(tr, tokens=60):
+    A = np.zeros((L, S, E), np.int64)
+    for s in range(S):
+        A[:, s] += tr.sample_counts(s, tokens, 2)
+    return A.sum(axis=1), A
+
+
+def _drive(c, windows=10, seed=0, shift=3000, poll=True):
+    """Feed identical drifting traffic windows; return per-window
+    (migrated, duration, assign-after)."""
+    tr = SourceExpertTraffic(L, E, S, seed=seed, shift_every_tokens=shift)
+    out = []
+    for w in range(windows):
+        B, A = _window(tr)
+        c.profiler.record_step(B, A, n_tokens=120)
+        migrated, dur = c.maybe_rebalance(now=float(w))
+        if poll:
+            c.poll_prefetch(now=float(w) + 0.5)
+        out.append((migrated, dur, c.placement.assign.copy()))
+    return out
+
+
+# ---------------------------------------------------------------- forecaster
+def test_stationary_exact_traffic_converges_to_reactive():
+    """On noiseless constant traffic the Holt forecast IS the reactive
+    count — predictive placement sees exactly what reactive sees."""
+    fc = ExpertTrafficForecaster(L, E, S)
+    A = np.tile(np.arange(1, E + 1, dtype=np.float64), (L, S, 1)) * 10
+    B = A.sum(axis=1)
+    for _ in range(12):
+        fc.observe(B, A)
+    Bp, Ap = fc.predict(B, A)
+    np.testing.assert_allclose(Ap, A, rtol=1e-9)
+    np.testing.assert_allclose(Bp, B, rtol=1e-9)
+    assert fc.forecast_mae == pytest.approx(0.0, abs=1e-12)
+    assert not fc.degraded
+
+
+def test_stationary_poisson_forecast_no_worse_than_persistence():
+    """Under stationary Poisson noise the smoothed level averages the
+    noise away; persistence replays it. The tracked error EMAs must
+    order accordingly (this is what 'converges to reactive' buys)."""
+    rng = np.random.default_rng(1)
+    lam = np.tile(np.linspace(5, 120, E), (L, S, 1))
+    fc = ExpertTrafficForecaster(L, E, S)
+    for _ in range(40):
+        A = rng.poisson(lam).astype(np.float64)
+        fc.observe(A.sum(axis=1), A)
+    assert fc.n_windows == 40
+    assert fc.forecast_mae <= fc.naive_mae
+    assert not fc.degraded and fc.fallback_windows == 0
+
+
+def test_horizon0_predict_is_verbatim_passthrough():
+    fc = ExpertTrafficForecaster(L, E, S, cfg=ForecastConfig(horizon=0))
+    rng = np.random.default_rng(2)
+    for _ in range(6):
+        A = rng.poisson(50, (L, S, E)).astype(np.float64)
+        B = A.sum(axis=1)
+        fc.observe(B, A)
+        Bp, Ap = fc.predict(B, A)
+        assert Bp is B and Ap is A        # same objects, not copies
+
+
+def test_oscillating_traffic_degrades_to_reactive_fallback():
+    """Traffic the model CANNOT extrapolate — the hot set flips every
+    window, so the horizon-amplified trend term overshoots where
+    persistence merely lags — must trip the degraded detector and hand
+    back the reactive counts instead of a bad forecast."""
+    rng = np.random.default_rng(3)
+    fc = ExpertTrafficForecaster(L, E, S, cfg=ForecastConfig(
+        horizon=6, fallback_rel_mae=0.2))
+    base = np.tile(np.linspace(1, 400, E), (L, S, 1))
+    flipped = base[:, :, ::-1].copy()
+    fallback_seen = 0
+    for w in range(30):
+        A = (base if w % 2 == 0 else flipped) + rng.poisson(3, (L, S, E))
+        B = A.sum(axis=1)
+        fc.observe(B, A)
+        Bp, Ap = fc.predict(B, A)
+        if fc.degraded:
+            assert Ap is A and Bp is B    # fallback = reactive verbatim
+            fallback_seen += 1
+    assert fc.degraded and fallback_seen > 0
+    assert fc.fallback_windows == fallback_seen
+
+
+# ------------------------------------------------------- coordinator wiring
+def test_horizon0_coordinator_bit_reproduces_reactive():
+    """The predictive pipeline with horizon 0 must make the SAME
+    decisions as the reactive coordinator, window for window: same
+    migrated flags, same durations, same assignments."""
+    reactive = _drive(_coord(), seed=5)
+    predictive = _drive(_coord(predictive=True,
+                               forecast_cfg=ForecastConfig(horizon=0)),
+                        seed=5)
+    assert any(m for m, _, _ in reactive)     # the traffic forces moves
+    for (m0, d0, a0), (m1, d1, a1) in zip(reactive, predictive):
+        assert m0 == m1 and d0 == d1
+        np.testing.assert_array_equal(a0, a1)
+
+
+def test_prefetch_stage_then_poll_flips_off_serving_path():
+    c = _coord(predictive=True, prefetch=True,
+               prefetch_cfg=PrefetchConfig(bw_bytes_s=1e6,
+                                           bytes_per_expert=1e5))
+    staged = []
+    c.on_prefetch = lambda plan, perms: staged.append((plan, perms))
+    tr = SourceExpertTraffic(L, E, S, seed=5, shift_every_tokens=3000)
+    B, A = _window(tr)
+    c.profiler.record_step(B, A, n_tokens=120)
+    migrated, dur = c.maybe_rebalance(now=1.0)
+    assert (migrated, dur) == (False, 0.0)    # staged, never a stall
+    assert staged and c.placement_signals()["prefetch_pending"] == 1
+    before = c.placement.assign.copy()
+    assert c.poll_prefetch(now=1.0) == 0      # copy still in flight
+    np.testing.assert_array_equal(c.placement.assign, before)
+    moves = c.poll_prefetch(now=1.0 + c.prefetch_cost.duration(
+        c.prefetch_cost.bytes_for(len(staged[0][0]))))
+    assert moves == len(staged[0][0]) > 0     # landed: pointer flip
+    sig = c.placement_signals()
+    assert sig["prefetch_hits"] == 1 and sig["migrations_hidden"] == moves
+    assert sig["sync_migrations"] == 0 and sig["prefetch_pending"] == 0
+    assert c.migration_log[-1]["hidden"]
+    # the flip adopted exactly the staged permutation
+    np.testing.assert_array_equal(np.asarray(c.placement.permutations()),
+                                  np.asarray(staged[0][1]))
+
+
+def test_prefetch_coordinator_reaches_sync_decisions():
+    """Prefetch changes WHEN a placement is adopted, never WHICH: after
+    every window's flip lands, the assignment equals the synchronous
+    coordinator's (same forecasts in, same greedy out)."""
+    sync = _drive(_coord(predictive=True), seed=7)
+    pre = _drive(_coord(predictive=True, prefetch=True,
+                        prefetch_cfg=PrefetchConfig(bw_bytes_s=1e12)),
+                 seed=7)
+    for (m0, d0, a0), (m1, d1, a1) in zip(sync, pre):
+        assert not m1 and d1 == 0.0           # prefetch never stalls
+        np.testing.assert_array_equal(a0, a1)
+    assert any(m for m, _, _ in sync)
+
+
+def test_prefetch_superseded_pending_counts_as_miss():
+    c = _coord(predictive=True, prefetch=True,
+               prefetch_cfg=PrefetchConfig(bw_bytes_s=1.0))  # never lands
+    tr = SourceExpertTraffic(L, E, S, seed=9, shift_every_tokens=500)
+    for w in range(6):
+        B, A = _window(tr)
+        c.profiler.record_step(B, A, n_tokens=120)
+        c.maybe_rebalance(now=float(w))
+    sig = c.placement_signals()
+    assert sig["prefetch_misses"] > 0 and sig["prefetch_hits"] == 0
+    assert c.placement.n_rebalances == 0      # nothing ever adopted
+
+
+def test_prefetch_cost_model_learns_measured_bandwidth():
+    pc = PrefetchCostModel(PrefetchConfig(bw_bytes_s=1e9, lat_s=0.0,
+                                          ema=0.5))
+    d0 = pc.duration(pc.bytes_for(4))
+    for _ in range(8):
+        pc.observe(1e8, 1.0)                  # measured: 1e8 B/s
+    assert pc.bw < 1e9 and pc.n_observed == 8
+    assert pc.duration(pc.bytes_for(4)) > d0  # slower link -> later flip
+
+
+# ------------------------------------------------------- real plane (slow)
+@pytest.mark.slow
+def test_real_cluster_prefetch_flip_token_identical(tiny_model,
+                                                    shared_runner):
+    """Prefetch-then-flip must be semantically invisible: same tokens as
+    the synchronous-migration cluster, with every placement adopted by
+    pointer swap and zero serving-path migrations."""
+    from repro.serving import (PagedModelRunner, PagedRealEngine,
+                               RealClusterConfig, Request, RequestState,
+                               serve_real_cluster)
+    cfg, params = tiny_model
+
+    def cluster():
+        # a PRIVATE runner per run: migrations permute the runner's params
+        # in place for the rest of its life, so sharing one across the two
+        # runs (or with other tests) would poison the comparison
+        runner = PagedModelRunner(cfg, params, shared_runner.ecfg,
+                                  n_sources=2)
+        ecfg = dataclasses.replace(shared_runner.ecfg, n_pages=48)
+        return [PagedRealEngine(i, cfg, params, ecfg,
+                                runner=runner, n_sources=2)
+                for i in range(2)]
+
+    def reqs():
+        rng = np.random.default_rng(5)
+        return [Request(req_id=i, prompt_len=10, max_new_tokens=5,
+                        arrival_time=0.1 * i,
+                        prompt_tokens=rng.integers(
+                            0, cfg.vocab_size, 10).tolist())
+                for i in range(16)]
+
+    sync_reqs = reqs()
+    res_s = serve_real_cluster(sync_reqs, cluster(),
+                               cluster_cfg=RealClusterConfig(
+        window_tokens=60, placement_cfg=PlacementConfig.uncalibrated()))
+    assert res_s.signals["migrations"] > 0    # the comparison has teeth
+    assert res_s.signals["prefetch_pointer_swaps"] == 0
+
+    pre_reqs = reqs()
+    res_p = serve_real_cluster(pre_reqs, cluster(),
+                               cluster_cfg=RealClusterConfig(
+        window_tokens=60, placement_cfg=PlacementConfig.uncalibrated(),
+        predictive=True, prefetch=True))
+    sig = res_p.signals
+    assert sig["prefetch_pointer_swaps"] > 0
+    assert sig["migrations_hidden"] > 0 and sig["sync_migrations"] == 0
+    assert all(r.state is RequestState.FINISHED and not r.error
+               for r in pre_reqs)
+    want = {r.req_id: r.full_output_tokens for r in sync_reqs}
+    assert all(r.full_output_tokens == want[r.req_id] for r in pre_reqs)
